@@ -1,0 +1,82 @@
+"""Partitioner-in-the-framework benchmarks: MoE dispatch balance,
+sequence packing, serving batcher (the paper's technique applied to the
+LM stack; DESIGN.md §3)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core.dynamic import AmortizedController
+from repro.data import pipeline as dp
+from repro.models import moe as Mo
+
+
+def bench_moe_dispatch() -> list[tuple]:
+    rows = []
+    cfg = reduced(ARCHS["qwen3-moe-30b-a3b"], num_experts=16, num_experts_per_tok=4)
+    key = jax.random.PRNGKey(0)
+    p = Mo.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (8, 256, cfg.d_model), jnp.float32)
+    fn = jax.jit(lambda pp, xx: Mo.moe_apply(pp, xx, cfg))
+    y, aux = fn(p, x)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        y, aux = fn(p, x)
+        y.block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    load = np.asarray(Mo.expert_load(p, x, cfg))
+    rows.append(
+        (
+            "moe_dispatch/16e_top4/T=2048", us,
+            f"aux={float(aux):.4f};load_cv={load.std()/max(load.mean(),1):.3f}",
+        )
+    )
+    # knapsack expert re-placement plan quality
+    part, plan = Mo.rebalance_expert_placement(jnp.asarray(load, jnp.float32), 4)
+    shard_loads = np.bincount(np.asarray(part), weights=load, minlength=4)
+    rows.append(
+        (
+            "moe_replacement/16e_to_4shards", 0.0,
+            f"shard_imbalance={int(shard_loads.max()-shard_loads.min())};moved={plan.total_moved}",
+        )
+    )
+    return rows
+
+
+def bench_packing() -> list[tuple]:
+    cfg = dp.DataConfig(vocab_size=1000, seq_len=4096, global_batch=8)
+    lens = dp.sample_doc_lengths(cfg, step=0, count=4000)
+    t0 = time.perf_counter()
+    bins = dp.pack_documents(lens, 4096)
+    us = (time.perf_counter() - t0) * 1e6
+    eff = dp.packing_efficiency(lens, bins, 4096)
+    base = dp.padded_baseline_efficiency(lens, 4096)
+    return [
+        (
+            "packing/docs=4000/seq=4096", us,
+            f"efficiency={eff:.3f};padded_baseline={base:.3f};gain={eff/base:.2f}x",
+        )
+    ]
+
+
+def bench_amortized_controller() -> list[tuple]:
+    """Alg 3 behaviour: rebalance count vs naive every-step rebalance."""
+    rng = np.random.default_rng(0)
+    drift = 0.01 + 0.001 * rng.random(500).cumsum()
+    c = AmortizedController()
+    c.balanced(lb_cost=5.0, num_buckets=100, timeop=drift[0])
+    rebalances = 0
+    for t in drift[1:]:
+        if c.observe(t, 100):
+            c.balanced(lb_cost=5.0, num_buckets=100, timeop=t)
+            rebalances += 1
+    return [
+        (
+            "amortized_lb/500_iters", 0.0,
+            f"rebalances={rebalances};naive=500;reduction={500/max(rebalances,1):.0f}x",
+        )
+    ]

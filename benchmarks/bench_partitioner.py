@@ -1,0 +1,170 @@
+"""Benchmarks for the core partitioner, one per paper figure/table.
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``.
+CPU wall-times are indicative (the container is 1-core); the *derived*
+column carries the paper-comparable quality metrics, which are
+machine-independent.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic, kdtree, knapsack, metrics, migration, partitioner, queries, sfc, spmv
+
+
+def _timeit(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out
+        )
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+# Fig 2-5: static kd-tree construction across splitters and distributions
+def bench_kdtree_build() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (50_000, 200_000):
+        pts_u = jnp.asarray(rng.random((n, 3)), jnp.float32)
+        clu = np.concatenate(
+            [rng.normal(0.05, 0.005, (n // 2, 3)), rng.random((n - n // 2, 3))]
+        ).astype(np.float32)
+        pts_c = jnp.asarray(clu)
+        for dist, pts in (("uniform", pts_u), ("cluster", pts_c)):
+            for splitter in ("midpoint", "median", "median_selection"):
+                us, tree = _timeit(
+                    kdtree.build, pts, None,
+                    max_depth=12, bucket_size=32, splitter=splitter, reps=1,
+                )
+                depth = float(jnp.mean(tree.leaf_depth()))
+                rows.append(
+                    (f"kdtree_build/{dist}/{splitter}/n={n}", us, f"mean_leaf_depth={depth:.2f}")
+                )
+    return rows
+
+
+# Fig 8-10: SFC traversal throughput (keys + sort), Morton vs Hilbert-like
+def bench_sfc_traversal() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(1)
+    for n in (500_000, 2_000_000):
+        pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+        for curve in ("morton", "hilbert"):
+            us, (perm, keys) = _timeit(
+                jax.jit(
+                    lambda p, c=curve: sfc.sfc_order(p, curve=c),
+                ), pts,
+            )
+            loc = float(sfc.locality_score(pts, perm))
+            rows.append((f"sfc_traverse/{curve}/n={n}", us, f"locality={loc:.5f}"))
+    # Pallas kernel path vs jnp reference (key generation only)
+    from repro.kernels import ops as kops
+
+    pts = jnp.asarray(rng.random((1_000_000, 3)), jnp.float32)
+    us_j, _ = _timeit(jax.jit(lambda p: sfc.morton_key(p, 10)), pts)
+    us_p, _ = _timeit(lambda p: kops.morton_key(p, 10), pts)
+    rows.append(("sfc_keys/morton/jnp/n=1e6", us_j, ""))
+    rows.append(("sfc_keys/morton/pallas_interpret/n=1e6", us_p, "validated-vs-ref"))
+    return rows
+
+
+# §III-C: knapsack slicing quality + imbalance bound
+def bench_knapsack() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(2)
+    for n, p in ((500_000, 256), (500_000, 4096)):
+        w = jnp.asarray((rng.random(n) + 0.1).astype(np.float32))
+        us, part = _timeit(lambda w_: knapsack.slice_weighted_curve(w_, p), w)
+        loads = np.asarray(knapsack.part_loads(w, part, p))
+        rows.append(
+            (
+                f"knapsack/n={n}/P={p}", us,
+                f"imbalance={loads.max()-loads.min():.3f};maxw={float(w.max()):.3f}",
+            )
+        )
+    return rows
+
+
+# Table I analogue: dynamic tree build / insert / delete / adjust
+def bench_dynamic() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(3)
+    for n, d in ((50_000, 3), (50_000, 10)):
+        pts = jnp.asarray(rng.random((n, d)), jnp.float32)
+        t0 = time.perf_counter()
+        dps = dynamic.from_points(pts, max_depth=14, bucket_size=32)
+        jax.block_until_ready(dps.tree.count)
+        t_build = (time.perf_counter() - t0) * 1e6
+        new = jnp.asarray(rng.random((n // 10, d)), jnp.float32)
+        t0 = time.perf_counter()
+        dps = dynamic.insert(dps, new, jnp.ones(n // 10, jnp.float32))
+        jax.block_until_ready(dps.tree.count)
+        t_ins = (time.perf_counter() - t0) * 1e6
+        kill = jnp.asarray(rng.choice(n, n // 10, replace=False))
+        t0 = time.perf_counter()
+        dps = dynamic.delete(dps, kill)
+        jax.block_until_ready(dps.tree.count)
+        t_del = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        dps = dynamic.adjustments(dps, max_sweeps=2)
+        jax.block_until_ready(dps.tree.count)
+        t_adj = (time.perf_counter() - t0) * 1e6
+        nb = int(dynamic.num_buckets(dps))
+        rows.append(
+            (
+                f"dynamic/n={n}/d={d}", t_build + t_ins + t_del + t_adj,
+                f"build={t_build:.0f};ins={t_ins:.0f};del={t_del:.0f};adj={t_adj:.0f};buckets={nb}",
+            )
+        )
+    return rows
+
+
+# Fig 12: exact point location; Fig 13: approximate k-NN
+def bench_queries() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(4)
+    for n in (500_000, 1_000_000):
+        pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+        idx = queries.build_index(pts, bucket_size=32)
+        q = pts[jnp.asarray(rng.choice(n, 50_000, replace=False))]
+        us, (found, _) = _timeit(lambda qq: queries.point_location(idx, qq), q)
+        rows.append(
+            (f"point_location/n={n}/q=1e5", us, f"found={float(found.mean()):.4f}")
+        )
+    pts = jnp.asarray(rng.random((500_000, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=32)
+    qq = jnp.asarray(rng.random((10_000, 3)), jnp.float32)
+    us, (dist, ids) = _timeit(lambda q: queries.knn(idx, q, k=3, cutoff_buckets=1), qq)
+    d_b, id_b = queries.knn_bruteforce(pts[:200_000], qq[:512], k=3)
+    rows.append((f"knn/k=3/n=1e6/q=1e4", us, f"mean_d={float(dist.mean()):.4f}"))
+    return rows
+
+
+# §IV incremental LB: migration locality + bounded rounds
+def bench_migration() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(5)
+    n, P = 500_000, 256
+    w0 = np.ones(n, np.float32)
+    old = np.asarray(knapsack.slice_weighted_curve(jnp.asarray(w0), P))
+    w1 = w0.copy()
+    w1[rng.choice(n, 25_000, replace=False)] *= 2.0
+    t0 = time.perf_counter()
+    new, _ = knapsack.incremental_reslice(jnp.asarray(w1), jnp.asarray(old), P)
+    jax.block_until_ready(new)
+    us = (time.perf_counter() - t0) * 1e6
+    plan = migration.migration_plan(old, np.asarray(new), P, max_msg_bytes=1 << 20)
+    rows.append(
+        (
+            "incremental_lb/n=1e6/P=256", us,
+            f"moved={plan.total_moved};neighbor_frac={migration.neighbor_locality(plan):.3f};rounds={plan.rounds}",
+        )
+    )
+    return rows

@@ -1,0 +1,213 @@
+"""Roofline analysis (harness deliverable g).
+
+Derives the three roofline terms per (arch x shape) on the single-pod
+mesh from compiled dry-run artifacts:
+
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+**Loop-count correction.** XLA's HloCostAnalysis counts a while-loop body
+ONCE (verified empirically), so a scanned-layers model under-reports by
+~L x. We therefore *probe*: compile shallow UNROLLED variants of each
+arch (1 and 3 layers; 3 probes for hybrid/enc-dec which have two depth
+parameters) at the full input shape, fit flops/bytes/collectives as an
+affine function of depth, and extrapolate to the real depth. The probes
+use the exact same sharding rules and input specs as the real cell.
+
+MODEL_FLOPS uses the 6*N*D convention (2*N*D for inference kinds), N =
+active params; the ratio MODEL_FLOPS / HLO_FLOPs shows how much compiled
+compute is "useful" (attention quadratic terms, remat recompute and
+head-padding all push it below 1).
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline --out roofline.json
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ModelConfig, ShardingRules
+from repro.distributed import sharding as shd
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / ICI link
+CHIPS = 256               # single pod 16x16
+
+
+def _compile_probe(cfg: ModelConfig, shape_name: str, rules: ShardingRules):
+    """Compile one unrolled shallow config; return per-device measures."""
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    # microbatch=None: grad-accumulation is a scan whose body the cost
+    # analysis counts once — probes must compute the whole batch inline
+    fn, args, in_sh, out_sh = dryrun.build_cell_fn(
+        cfg, shape, mesh, rules, microbatch=None
+    )
+    donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+    with shd.activation_mesh(mesh, rules):
+        compiled = (
+            jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+            .lower(*args)
+            .compile()
+        )
+    cost = compiled.cost_analysis()
+    coll = dryrun.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["total_bytes"]),
+    }
+
+
+def _probe_configs(cfg: ModelConfig) -> tuple[list[ModelConfig], callable]:
+    """Returns (probe configs, combine(measures) -> totals at real depth)."""
+    base = dict(scan_layers=False)
+    if cfg.family == "hybrid":
+        # f(L, sites) = c + a*L + b*sites ; probes (2,1),(4,2),(4,1)
+        p1 = dataclasses.replace(cfg, num_layers=2, attn_every=2, **base)
+        p2 = dataclasses.replace(cfg, num_layers=4, attn_every=2, **base)
+        p3 = dataclasses.replace(cfg, num_layers=4, attn_every=4, **base)
+        L = cfg.num_layers
+        S = max(1, cfg.num_layers // cfg.attn_every)
+
+        def combine(ms):
+            out = {}
+            for k in ("flops", "bytes", "coll"):
+                f1, f2, f3 = ms[0][k], ms[1][k], ms[2][k]
+                a = (f3 - f1) / 2.0        # per mamba layer
+                b = f2 - f3                # per attention site
+                c = f1 - 2 * a - b
+                out[k] = c + a * L + b * S
+            return out
+
+        return [p1, p2, p3], combine
+    if cfg.family == "encdec":
+        p1 = dataclasses.replace(cfg, encoder_layers=1, num_layers=1, **base)
+        p2 = dataclasses.replace(cfg, encoder_layers=3, num_layers=1, **base)
+        p3 = dataclasses.replace(cfg, encoder_layers=1, num_layers=3, **base)
+        E, D = cfg.encoder_layers, cfg.num_layers
+
+        def combine(ms):
+            out = {}
+            for k in ("flops", "bytes", "coll"):
+                f1, f2, f3 = ms[0][k], ms[1][k], ms[2][k]
+                ae = (f2 - f1) / 2.0
+                ad = (f3 - f1) / 2.0
+                c = f1 - ae - ad
+                out[k] = c + ae * E + ad * D
+            return out
+
+        return [p1, p2, p3], combine
+    # single depth parameter
+    p1 = dataclasses.replace(cfg, num_layers=1, **base)
+    p2 = dataclasses.replace(cfg, num_layers=3, **base)
+    L = cfg.num_layers
+
+    def combine(ms):
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            f1, f2 = ms[0][k], ms[1][k]
+            a = (f2 - f1) / 2.0
+            c = f1 - a
+            out[k] = c + a * L
+        return out
+
+    return [p1, p2], combine
+
+
+def model_flops_per_device(cfg: ModelConfig, shape_name: str) -> float:
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / CHIPS
+
+
+def analyze_cell(arch: str, shape_name: str, rules: ShardingRules | None = None) -> dict:
+    cfg = ARCHS[arch]
+    rules = rules or ShardingRules()
+    probes, combine = _probe_configs(cfg)
+    t0 = time.time()
+    measures = [_compile_probe(p, shape_name, rules) for p in probes]
+    totals = combine(measures)
+    mf = model_flops_per_device(cfg, shape_name)
+    t_comp = totals["flops"] / PEAK_FLOPS
+    t_mem = totals["bytes"] / HBM_BW
+    t_coll = totals["coll"] / LINK_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll), key=lambda kv: kv[1]
+    )[0]
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "flops_per_device": totals["flops"],
+        "bytes_per_device": totals["bytes"],
+        "collective_bytes_per_device": totals["coll"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / totals["flops"] if totals["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "probe_time_s": round(time.time() - t0, 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="roofline.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results}
+    for arch, shape_name, status in dryrun.cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape_name != args.shape:
+            continue
+        if status != "run" or (arch, shape_name) in done:
+            continue
+        try:
+            rec = analyze_cell(arch, shape_name)
+            print(
+                f"{arch:22s} {shape_name:12s} dom={rec['dominant']:10s} "
+                f"tc={rec['t_compute_s']:.3e} tm={rec['t_memory_s']:.3e} "
+                f"tx={rec['t_collective_s']:.3e} useful={rec['useful_flops_ratio']:.2f} "
+                f"roofline={rec['roofline_fraction']:.2f}"
+            )
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape_name, "error": str(e)}
+            print(f"[ERR] {arch} {shape_name}: {e}")
+        results.append(rec)
+        json.dump(results, open(args.out, "w"), indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Render roofline.json + dryrun JSONs into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report > roofline_table.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def main() -> None:
+    rows = json.load(open("roofline.json")) if os.path.exists("roofline.json") else []
+    print("### §Roofline table — 16x16 mesh, per (arch x shape)\n")
+    print(
+        "| arch | shape | t_compute s | t_memory s | t_collective s | dominant "
+        "| MODEL/HLO flops | roofline fraction |"
+    )
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | error |  |  |  |  |  |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |"
+        )
+    # one-line "what would move the dominant term" notes
+    notes = {
+        "compute": "triangular blockwise-attention schedule (causal skips) / head-count padding removal",
+        "memory": "fuse decode cache streaming; larger decode batch per chip; bf16 optimizer bandwidth",
+        "collective": "overlap FSDP all-gathers with layer compute (latency-hiding scheduler); hierarchical DCN reduce + int8 EF compression cross-pod",
+    }
+    print("\nDominant-term reduction notes: ")
+    for k, v in notes.items():
+        print(f"- **{k}**: {v}")
+
+    for f, name in (("dryrun_16x16.json", "16x16 (256 chips)"), ("dryrun_2x16x16.json", "2x16x16 (512 chips)")):
+        if not os.path.exists(f):
+            continue
+        rs = json.load(open(f))
+        ok = sum(1 for r in rs if r.get("status") == "ok")
+        print(f"\n### §Dry-run — mesh {name}: {ok} compiled / {len(rs)} cells\n")
+        print("| arch | shape | peak GiB/dev | args GiB | temp GiB |")
+        print("|---|---|---|---|---|")
+        for r in rs:
+            if r.get("status") == "ok":
+                print(
+                    f"| {r['arch']} | {r['shape']} | {r['peak_bytes']/2**30:.2f} | "
+                    f"{r['argument_bytes']/2**30:.2f} | {r['temp_bytes']/2**30:.2f} |"
+                )
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['status'][:48]} |  |  |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entrypoint (deliverable d): one function per paper
+table/figure. Prints ``name,us_per_call,derived`` CSV.
+
+The roofline analysis (deliverable g) is a separate entrypoint —
+``python -m benchmarks.roofline`` — because it needs the 512-fake-device
+environment, which must not leak into these CPU benchmarks.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_moe, bench_partitioner, bench_spmv
+
+    suites = [
+        ("kdtree (paper Figs 2-5)", bench_partitioner.bench_kdtree_build),
+        ("sfc traversal (Figs 8-10)", bench_partitioner.bench_sfc_traversal),
+        ("knapsack (SIII-C)", bench_partitioner.bench_knapsack),
+        ("dynamic trees (Table I)", bench_partitioner.bench_dynamic),
+        ("queries (Figs 12-13)", bench_partitioner.bench_queries),
+        ("incremental LB (SIV)", bench_partitioner.bench_migration),
+        ("spmv tables (Tables II-VII)", bench_spmv.bench_spmv_tables),
+        ("spmv execution", bench_spmv.bench_spmv_execution),
+        ("moe dispatch (DESIGN S3)", bench_moe.bench_moe_dispatch),
+        ("sequence packing", bench_moe.bench_packing),
+        ("amortized controller (Alg 3)", bench_moe.bench_amortized_controller),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in suites:
+        print(f"# --- {title}")
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# SUITE FAILED: {title}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""General graph partitioning + distributed SpMV (paper §V-B).
+
+Builds a power-law graph, compares row-wise vs SFC partitions on the
+paper's Table II-VII metrics, and executes the reduce-scatter SpMV.
+
+    PYTHONPATH=src python examples/partition_graph.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv
+from repro.launch.mesh import make_mesh
+
+n = 50_000
+src, dst = spmv.powerlaw_graph(n, 10, seed=7)
+print(f"graph: {n} vertices, {len(src)} edges (power-law)")
+
+P = 16
+prow = spmv.rowwise_partition(src, n, P)
+psfc = spmv.sfc_partition(src, dst, n, P)
+m_r = spmv.communication_metrics(prow, src, dst, n, P, improve=False)
+m_s = spmv.communication_metrics(psfc, src, dst, n, P)
+hdr = f"{'':10s} {'AvgLoad':>9s} {'MaxLoad':>9s} {'MaxDegree':>9s} {'MaxEdgeCut':>10s}"
+print(hdr)
+for name, m in (("row-wise", m_r), ("sfc", m_s)):
+    print(
+        f"{name:10s} {m['AvgLoad']:9d} {m['MaxLoad']:9d} "
+        f"{m['MaxDegree']:9d} {m['MaxEdgeCut']:10d}"
+    )
+
+# executable distributed SpMV on however many devices exist
+rng = np.random.default_rng(0)
+vals = rng.random(len(src)).astype(np.float32)
+x = jnp.asarray(rng.random(n), jnp.float32)
+Pd = min(8, jax.device_count())
+mesh = make_mesh((Pd,), ("parts",))
+part = spmv.sfc_partition(src, dst, n, Pd)
+y = spmv.distributed_spmv(mesh, "parts", src, dst, vals, part, x, n)
+yref = spmv.spmv_reference(src, dst, vals, x, n)
+print(f"\ndistributed SpMV on {Pd} shards: max err {float(jnp.max(jnp.abs(y-yref))):.2e}")

@@ -1,0 +1,30 @@
+"""Quickstart: partition a point cloud with the SFC partitioner and
+inspect the paper's quality metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, partitioner
+
+rng = np.random.default_rng(0)
+
+# a clustered 3-D point cloud with non-uniform weights
+pts = np.concatenate(
+    [rng.normal(0.2, 0.03, (30_000, 3)), rng.random((30_000, 3))]
+).astype(np.float32)
+weights = (rng.random(60_000) + 0.5).astype(np.float32)
+
+for curve in ("morton", "hilbert"):
+    cfg = partitioner.PartitionerConfig(curve=curve, stats="rank")
+    res = partitioner.partition(jnp.asarray(pts), jnp.asarray(weights), num_parts=16, cfg=cfg)
+    loads = np.asarray(res.loads)
+    cross = metrics.knn_cross_fraction(pts, np.asarray(res.part), k=4, sample=1024)
+    print(
+        f"{curve:8s} imbalance={loads.max()-loads.min():8.3f} "
+        f"(max element weight {weights.max():.3f})  kNN-cut={cross:.3f}"
+    )
+
+print("\nPartitions are contiguous curve slices; the load guarantee is the")
+print("paper's: any two parts differ by at most ~one max element weight.")

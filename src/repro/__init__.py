@@ -1,0 +1,3 @@
+"""repro: distributed geometric partitioning (SFC + kd-tree + knapsack)
+integrated into a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,138 @@
+"""Checkpointing: sharded-safe save/restore with atomic commit, async
+save thread, and elastic restore (re-shard to a different mesh).
+
+Format: one ``.npz`` per pytree leaf group + a JSON manifest holding the
+tree structure, shapes, dtypes and the step. Writes go to a temp dir
+that is atomically renamed on completion, so a crash mid-save never
+corrupts the latest checkpoint (restart scans for the newest *committed*
+step directory).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree) -> dict[str, jax.Array]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree, *, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    dtypes = {k: str(a.dtype) for k, a in arrays.items()}
+    # numpy's npz cannot round-trip ml_dtypes (bfloat16 etc.); store such
+    # arrays as uint16 bit patterns and record the logical dtype.
+    stored = {
+        k: (a.view(np.uint16) if a.dtype.itemsize == 2 and "float" in str(a.dtype) and a.dtype != np.float16 else a)
+        for k, a in arrays.items()
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in-flight save)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree: Pytree, *, extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.device_get(tree)  # snapshot before training mutates
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree), kwargs={"extra": extra}
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+            os.path.join(ckpt_dir, d, "manifest.json")
+        ):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    like: Pytree,
+    *,
+    shardings: Pytree | None = None,
+) -> tuple[Pytree, dict]:
+    """Restore into the structure of ``like``.
+
+    ``shardings`` (a pytree of NamedSharding matching ``like``) enables
+    *elastic* restore: arrays saved under one mesh are placed onto a
+    different mesh — the knapsack of the new mesh decides the slices, the
+    checkpoint stores only logical arrays (mesh-agnostic by design).
+    """
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays.npz"))
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat_like)
+    )
+    for (path, proto), sh in zip(flat_like, shard_leaves):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        expect = tuple(proto.shape)
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
+        if arr.dtype == np.uint16 and manifest["dtypes"][key] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out = jnp.asarray(arr, dtype=proto.dtype)
+        if sh is not None:
+            out = jax.device_put(out, sh)
+        leaves.append(out)
+    tree = jax.tree_util.tree_unflatten(jax.tree.structure(like), leaves)
+    return tree, manifest["extra"]

@@ -1,0 +1,28 @@
+"""Config registry: --arch <id> resolves here."""
+from repro.configs import (
+    deepseek_7b,
+    deepseek_coder_33b,
+    mamba2_130m,
+    minicpm_2b,
+    mixtral_8x22b,
+    paligemma_3b,
+    qwen3_moe_30b_a3b,
+    smollm_135m,
+    whisper_base,
+    zamba2_7b,
+)
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeConfig, ShardingRules, reduced
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        deepseek_coder_33b, smollm_135m, deepseek_7b, minicpm_2b, zamba2_7b,
+        whisper_base, mixtral_8x22b, qwen3_moe_30b_a3b, paligemma_3b, mamba2_130m,
+    )
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,203 @@
+"""Config system: model/shape/run configs for every assigned architecture.
+
+Configs are frozen dataclasses (hashable -> usable as jit static args).
+``--arch <id>`` in the launchers resolves through ``repro.configs.registry``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2): shared attention block every k ssm blocks ---
+    attn_every: int = 0
+    # --- sliding-window attention (mixtral) ---
+    window: int = 0
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0          # fixed encoder memory length for serving
+    # --- vlm (paligemma) ---
+    num_prefix_tokens: int = 0    # image patch tokens (stub frontend)
+    frontend: str = ""            # "audio_stub" | "vision_stub" | ""
+    # --- common ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    # --- compilation strategy ---
+    scan_layers: bool = True
+    remat: bool = True
+    dtype: str = "bfloat16"
+
+    # embedding tables are padded to a TP-shardable multiple; odd vocab
+    # sizes (minicpm 122,753; whisper 51,865) otherwise force replicated
+    # (B, S, V) fp32 logits — measured 61.9 GiB/device at minicpm
+    # prefill_32k. Padded slots are masked to -inf in the loss/decode.
+    vocab_pad_multiple: int = 256
+
+    @property
+    def padded_vocab_size(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? (SSM state, hybrid, or
+        sliding-window KV cap — see DESIGN.md long_500k skip rule.)"""
+        return self.family in ("ssm", "hybrid") or self.window > 0
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        H, KV, hd = self.num_heads, self.num_kv_heads, self.head_dim
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        mlp = 3 * D * F
+        if self.family == "moe":
+            mlp = 3 * D * F * self.num_experts + D * self.num_experts
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di, N, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            ssm = D * (2 * di + 2 * N + nh) + di * D + di  # in/out proj + dt/B/C
+        blocks = 0
+        if self.family == "ssm":
+            blocks = L * (ssm + 2 * D)
+        elif self.family == "hybrid":
+            n_attn_apps = L // max(self.attn_every, 1)
+            blocks = L * (ssm + 2 * D) + (attn + mlp + 2 * D)  # one SHARED attn block
+            del n_attn_apps
+        elif self.family == "encdec":
+            enc = self.encoder_layers * (attn + mlp + 2 * D)
+            dec = L * (2 * attn + mlp + 3 * D)  # self + cross attention
+            blocks = enc + dec
+        else:
+            blocks = L * (attn + mlp + 2 * D)
+        embed = V * D * (1 if self.tie_embeddings else 2)
+        return embed + blocks + D
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k of experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.num_layers
+        dense_like = self.param_count() - L * 3 * D * F * self.num_experts
+        return dense_like + L * 3 * D * F * self.num_experts_per_tok
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell from the assignment."""
+
+    name: str                       # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping (the hillclimbable knob).
+
+    Values are mesh axis names or None. ``fsdp`` shards the non-TP param
+    dim; ``tp`` shards heads / ffn / vocab; batch shards over (pod, data).
+    """
+
+    batch: tuple = ("pod", "data")
+    fsdp: str | None = "data"     # param dim sharded FSDP-style
+    tp: str | None = "model"      # tensor-parallel param dim
+    seq: str | None = "model"     # sequence parallelism: shards the layer-scan
+    #                               remat stash (B,S,D) over TP at block edges
+    expert: str | None = "model"  # MoE expert dim (EP)
+    cache_batch: tuple = ("pod", "data")
+    cache_heads: str | None = "model"
+    # pin blocked-flash-attention tensor shardings: fixes an involuntary
+    # full-remat reshard in the BACKWARD pass (+23% train roofline) but
+    # perturbs GSPMD's better forward-only layout — so train-only.
+    blocked_attn: bool = True
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    rules: ShardingRules = ShardingRules()
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    schedule: str = "cosine"       # "cosine" | "wsd"
+    grad_clip: float = 1.0
+    microbatch: int | None = None  # grad-accum microbatch (None = whole batch)
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (used by tests)."""
+    small = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        scan_layers=cfg.scan_layers,
+        remat=False,
+    )
+    if cfg.family == "moe":
+        small.update(num_experts=min(cfg.num_experts, 4), num_experts_per_tok=2)
+    if cfg.family in ("ssm", "hybrid"):
+        small.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=16)
+    if cfg.family == "hybrid":
+        small.update(attn_every=2)
+    if cfg.family == "encdec":
+        small.update(encoder_layers=2, encoder_seq=32)
+    if cfg.family == "vlm":
+        small.update(num_prefix_tokens=8)
+    if cfg.window:
+        small.update(window=16)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

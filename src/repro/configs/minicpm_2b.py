@@ -1,0 +1,9 @@
+"""minicpm-2b [arXiv:2404.06395] — llama-like, trained with the WSD
+(warmup-stable-decay) schedule, implemented in repro.optim.schedule."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36, head_dim=64,
+    d_ff=5760, vocab_size=122753, tie_embeddings=True,
+)

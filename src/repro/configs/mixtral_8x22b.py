@@ -1,0 +1,11 @@
+"""mixtral-8x22b [arXiv:2401.04088] — 8 experts top-2, sliding-window attn."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=32768,
+    num_experts=8, num_experts_per_tok=2,
+    window=4096,  # SWA caps the decode KV cache -> long_500k runs
+    rope_theta=1000000.0,
+)

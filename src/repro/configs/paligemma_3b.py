@@ -1,0 +1,12 @@
+"""paligemma-3b [arXiv:2407.07726] — SigLIP stub + gemma backbone.
+
+gemma-2b geometry: 8 heads x head_dim 256, 1 KV head, GeGLU d_ff=16384.
+num_prefix_tokens=256 (224px / 14px patches); prefix-LM masking."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=257216, tie_embeddings=True,
+    num_prefix_tokens=256, frontend="vision_stub", act="gelu",
+)

@@ -1,0 +1,12 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B] — 128 experts top-8.
+
+head_dim is 128 (explicit in the HF config; q-proj expands 2048 -> 4096)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4, head_dim=128,
+    d_ff=768, vocab_size=151936,
+    num_experts=128, num_experts_per_tok=8,
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,11 @@
+"""whisper-base [arXiv:2212.04356] — enc-dec; conv/mel frontend is a stub
+(precomputed frame embeddings). 6 encoder + 6 decoder layers."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="encdec",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab_size=51865,
+    encoder_layers=6, encoder_seq=1500, act="gelu", tie_embeddings=True,
+    frontend="audio_stub",
+)

@@ -1,0 +1,10 @@
+"""zamba2-7b [arXiv:2411.15242] — Mamba2 backbone + shared attention blocks."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32, head_dim=112,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+    attn_every=6,  # one shared attention application per 6 mamba blocks
+)

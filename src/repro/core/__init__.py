@@ -1,0 +1,18 @@
+"""Core library: the paper's geometric partitioner as composable JAX modules."""
+from repro.core import (  # noqa: F401
+    dynamic,
+    kdtree,
+    knapsack,
+    metrics,
+    migration,
+    partitioner,
+    queries,
+    sfc,
+    spmv,
+)
+from repro.core.partitioner import (  # noqa: F401
+    PartitionerConfig,
+    PartitionResult,
+    distributed_partition,
+    partition,
+)

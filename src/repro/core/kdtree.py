@@ -1,0 +1,354 @@
+"""Hierarchical domain decomposition — linearized kd-trees (paper §III-A).
+
+The paper stores the tree as flat vectors (its Fig. 1 "linearized
+kd-tree": a vector of indices + a vector of coordinates + node records).
+That layout is exactly what XLA wants, so the TPU adaptation keeps it and
+replaces the recursive, lock-free construction with a *level-synchronous*
+breadth-first build: at each level every active node computes its tight
+bounding box, splitting hyperplane and child memberships **in parallel**
+via segment reductions. This is the dataflow expression of the paper's
+"threads and processes built different sections of the tree in parallel
+without any communication".
+
+Node table is in heap order: node k has children 2k+1 / 2k+2. Recursion
+terminates when a node holds <= bucket_size points (BUCKETSIZE in the
+paper) or at max_depth.
+
+Splitters (paper §III-A, all four):
+  * ``midpoint``          — mean of min/max along the widest dimension.
+  * ``median``            — exact median via per-segment sort.
+  * ``median_sampled``    — median of a hashed subsample (approximate).
+  * ``median_selection``  — median by iterative bisection *selection*
+                            (rank counting, no sort — Blum et al. style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Splitter = Literal["midpoint", "median", "median_sampled", "median_selection"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "split_dim", "split_val", "count", "weight", "is_leaf",
+        "bbox_lo", "bbox_hi", "leaf_id",
+    ),
+    meta_fields=("max_depth", "bucket_size"),
+)
+@dataclasses.dataclass(frozen=True)
+class LinearKdTree:
+    """Linearized kd-tree (a pytree of fixed-shape arrays).
+
+    Node arrays have length M = 2^(max_depth+1) - 1 (heap order). Nodes
+    that were never materialized have count == 0. ``max_depth`` and
+    ``bucket_size`` are static pytree metadata, so jitted functions can
+    use them in python control flow.
+    """
+
+    split_dim: jax.Array  # (M,) int32, -1 for leaves/empty
+    split_val: jax.Array  # (M,) float32
+    count: jax.Array      # (M,) int32 points in subtree
+    weight: jax.Array     # (M,) float32 sum of point weights in subtree
+    is_leaf: jax.Array    # (M,) bool
+    bbox_lo: jax.Array    # (M, d) float32 tight bbox
+    bbox_hi: jax.Array    # (M, d) float32
+    leaf_id: jax.Array    # (n,) int32 heap index of the leaf holding each point
+    max_depth: int        # static
+    bucket_size: int      # static
+
+    def _replace(self, **kw) -> "LinearKdTree":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.split_dim.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.bbox_lo.shape[1]
+
+    def leaf_depth(self) -> jax.Array:
+        """Depth of each point's leaf (floor(log2(leaf_id+1)))."""
+        return jnp.floor(jnp.log2(self.leaf_id.astype(jnp.float32) + 1.0)).astype(jnp.int32)
+
+
+def _level_slice(level: int) -> tuple[int, int]:
+    """[start, end) heap indices of nodes at ``level``."""
+    return (1 << level) - 1, (1 << (level + 1)) - 1
+
+
+def _segment_median_sort(
+    vals: jax.Array, seg: jax.Array, include: jax.Array, num_segments: int,
+) -> jax.Array:
+    """Exact median per segment by sorting (seg, val) pairs.
+
+    ``include`` masks the points that participate (live points, or the
+    hashed subsample for the sampled variant). Masked points are routed to
+    an overflow segment that sorts after all real segments, so per-segment
+    offsets are exactly the cumulative included counts.
+    """
+    segx = jnp.where(include, seg, num_segments)  # masked -> overflow segment
+    counts = jax.ops.segment_sum(
+        include.astype(jnp.int32), seg, num_segments=num_segments
+    )
+    # composite sort: by value then (stable) by segment
+    order = jnp.argsort(vals, stable=True)
+    order = order[jnp.argsort(segx[order], stable=True)]
+    sorted_vals = vals[order]
+    starts = jnp.cumsum(counts) - counts
+    mid = starts + jnp.maximum(counts - 1, 0) // 2
+    mid = jnp.clip(mid, 0, vals.shape[0] - 1)
+    return sorted_vals[mid]
+
+
+def _segment_median_selection(
+    vals: jax.Array, seg: jax.Array, include: jax.Array, counts: jax.Array,
+    lo: jax.Array, hi: jax.Array, num_segments: int, iters: int = 24,
+) -> jax.Array:
+    """Median per segment by bisection selection (no sort).
+
+    Binary-search the value domain; count elements <= mid per segment via
+    segment_sum. O(iters) passes over the data, each fully parallel.
+    """
+    target = (counts + 1) // 2  # rank of the lower median (1-based)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = 0.5 * (lo_ + hi_)
+        below = jax.ops.segment_sum(
+            (include & (vals <= mid[seg])).astype(jnp.int32),
+            seg,
+            num_segments=num_segments,
+        )
+        go_right = below < target
+        lo_ = jnp.where(go_right, mid, lo_)
+        hi_ = jnp.where(go_right, hi_, mid)
+        return lo_, hi_
+
+    lo_f, hi_f = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi_f
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "bucket_size", "splitter", "sample_shift", "median_top_levels"),
+)
+def build(
+    points: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    max_depth: int = 16,
+    bucket_size: int = 32,
+    splitter: Splitter = "midpoint",
+    sample_shift: int = 3,
+    median_top_levels: int | None = None,
+) -> LinearKdTree:
+    """Build a linearized kd-tree over (n, d) points.
+
+    ``median_top_levels``: if set, use the configured (median) splitter for
+    the top levels and midpoint below — the paper's hybrid policy ("median
+    splitters at the top nodes and midpoint at the lower nodes").
+    """
+    n, d = points.shape
+    if weights is None:
+        weights = jnp.ones((n,), dtype=jnp.float32)
+    M = (1 << (max_depth + 1)) - 1
+
+    split_dim = jnp.full((M,), -1, dtype=jnp.int32)
+    split_val = jnp.zeros((M,), dtype=jnp.float32)
+    count = jnp.zeros((M,), dtype=jnp.int32)
+    weight = jnp.zeros((M,), dtype=jnp.float32)
+    is_leaf = jnp.zeros((M,), dtype=bool)
+    bbox_lo = jnp.zeros((M, d), dtype=jnp.float32)
+    bbox_hi = jnp.zeros((M, d), dtype=jnp.float32)
+
+    node = jnp.zeros((n,), dtype=jnp.int32)  # heap id of current node per point
+    settled = jnp.zeros((n,), dtype=bool)    # point already in a finished leaf
+
+    # hashed subsample mask for the sampled-median splitter (deterministic)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = (idx * jnp.uint32(2654435761)) >> jnp.uint32(32 - 8)
+    sampled = (h & ((1 << sample_shift) - 1)) == 0  # ~ n / 2^sample_shift points
+
+    for level in range(max_depth + 1):
+        start, end = _level_slice(level)
+        S = end - start  # 2^level segments at this level
+        seg = jnp.clip(node - start, 0, S - 1)
+        live = ~settled  # points still flowing down
+
+        w_live = jnp.where(live, weights, 0.0)
+        cnt = jax.ops.segment_sum(live.astype(jnp.int32), seg, num_segments=S)
+        wsum = jax.ops.segment_sum(w_live, seg, num_segments=S)
+
+        big = jnp.float32(3.4e38)
+        pts_lo = jnp.where(live[:, None], points, big)
+        pts_hi = jnp.where(live[:, None], points, -big)
+        lo = jax.ops.segment_min(pts_lo, seg, num_segments=S)
+        hi = jax.ops.segment_max(pts_hi, seg, num_segments=S)
+        lo = jnp.where(cnt[:, None] > 0, lo, 0.0)
+        hi = jnp.where(cnt[:, None] > 0, hi, 0.0)
+
+        count = jax.lax.dynamic_update_slice(count, cnt, (start,))
+        weight = jax.lax.dynamic_update_slice(weight, wsum, (start,))
+        bbox_lo = jax.lax.dynamic_update_slice(bbox_lo, lo, (start, 0))
+        bbox_hi = jax.lax.dynamic_update_slice(bbox_hi, hi, (start, 0))
+
+        # leaf decision for this level
+        leaf_here = (cnt > 0) & ((cnt <= bucket_size) | (level == max_depth))
+        is_leaf = jax.lax.dynamic_update_slice(is_leaf, leaf_here, (start,))
+
+        if level == max_depth:
+            # settle all remaining points at the bottom level
+            settled = settled | live
+            break
+
+        # splitting hyperplane for active (non-leaf, non-empty) nodes
+        active = (cnt > 0) & ~leaf_here
+        sdim = jnp.argmax(hi - lo, axis=1).astype(jnp.int32)  # widest dim
+        dim_per_pt = sdim[seg]
+        coord = jnp.take_along_axis(points, dim_per_pt[:, None], axis=1)[:, 0]
+        lo_d = jnp.take_along_axis(lo, sdim[:, None], axis=1)[:, 0]
+        hi_d = jnp.take_along_axis(hi, sdim[:, None], axis=1)[:, 0]
+
+        level_splitter = splitter
+        if median_top_levels is not None and level >= median_top_levels:
+            level_splitter = "midpoint"
+
+        if level_splitter == "midpoint":
+            sval = 0.5 * (lo_d + hi_d)
+        elif level_splitter == "median":
+            sval = _segment_median_sort(coord, seg, live, S)
+        elif level_splitter == "median_sampled":
+            inc = sampled & live
+            scnt = jax.ops.segment_sum(inc.astype(jnp.int32), seg, num_segments=S)
+            sval = _segment_median_sort(coord, seg, inc, S)
+            # nodes with an empty sample fall back to midpoint
+            sval = jnp.where(scnt > 0, sval, 0.5 * (lo_d + hi_d))
+        elif level_splitter == "median_selection":
+            sval = _segment_median_selection(coord, seg, live, cnt, lo_d, hi_d, S)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown splitter {splitter!r}")
+
+        # clamp degenerate splits (all points equal along dim): midpoint
+        sval = jnp.where(hi_d > lo_d, sval, lo_d)
+
+        split_dim = jax.lax.dynamic_update_slice(
+            split_dim, jnp.where(active, sdim, -1), (start,)
+        )
+        split_val = jax.lax.dynamic_update_slice(
+            split_val, jnp.where(active, sval, 0.0), (start,)
+        )
+
+        # route live points: side=0 if coord <= split_val (paper: "less than
+        # or equal to m ... lower sub cell")
+        node_active = active[seg]
+        side = (coord > sval[seg]).astype(jnp.int32)
+        new_node = 2 * node + 1 + side
+        settled_now = live & ~node_active  # reached a leaf at this level
+        settled = settled | settled_now
+        node = jnp.where(live & node_active, new_node, node)
+
+    return LinearKdTree(
+        split_dim=split_dim,
+        split_val=split_val,
+        count=count,
+        weight=weight,
+        is_leaf=is_leaf,
+        bbox_lo=bbox_lo,
+        bbox_hi=bbox_hi,
+        leaf_id=node,
+        max_depth=max_depth,
+        bucket_size=bucket_size,
+    )
+
+
+def leaf_nodes(tree: LinearKdTree) -> jax.Array:
+    """Boolean mask (M,) of leaves that actually hold points."""
+    return tree.is_leaf & (tree.count > 0)
+
+
+def tree_order(
+    tree: LinearKdTree,
+    points: jax.Array,
+    *,
+    curve: str = "hilbert",
+    bits: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Order points by the SFC key of their *leaf bucket* center, breaking
+    ties by point key (paper §III-B: nodes are re-ordered by their SFC
+    keys; point data follows its bucket).
+
+    Returns (perm, bucket_key_per_point).
+    """
+    from repro.core import sfc as _sfc
+
+    keyfn = _sfc.hilbert_key if curve == "hilbert" else _sfc.morton_key
+    centers = 0.5 * (tree.bbox_lo + tree.bbox_hi)
+    # quantize bucket centers against the root bbox
+    d = tree.dim
+    if bits is None:
+        bits = _sfc.max_bits_per_dim(d)
+    root_lo, root_hi = tree.bbox_lo[0], tree.bbox_hi[0]
+    span = jnp.where(root_hi > root_lo, root_hi - root_lo, 1.0)
+    unit = jnp.clip((centers - root_lo) / span, 0.0, 1.0 - 1e-7)
+    cells = (unit * (2**bits)).astype(jnp.uint32)
+    node_keys = (
+        _sfc.hilbert_key_from_cells(cells, bits)
+        if curve == "hilbert"
+        else _sfc.morton_key_from_cells(cells, bits)
+    )
+    pt_bucket_key = node_keys[tree.leaf_id]
+    # stable sort by bucket key keeps intra-bucket order deterministic
+    perm = jnp.argsort(pt_bucket_key, stable=True)
+    return perm, pt_bucket_key
+
+
+def validate(tree: LinearKdTree, points: jax.Array) -> dict:
+    """Host-side structural invariants (used by property tests)."""
+    import numpy as np
+
+    sd = np.asarray(tree.split_dim)
+    sv = np.asarray(tree.split_val)
+    cnt = np.asarray(tree.count)
+    leaf = np.asarray(tree.is_leaf)
+    leaf_id = np.asarray(tree.leaf_id)
+    pts = np.asarray(points)
+    M = sd.shape[0]
+    problems = []
+    # every point's leaf is a real leaf
+    if not leaf[leaf_id].all():
+        problems.append("point assigned to non-leaf")
+    # child counts sum to parent count for internal nodes
+    internal = (~leaf) & (cnt > 0)
+    for k in np.nonzero(internal)[0]:
+        l, r = 2 * k + 1, 2 * k + 2
+        if r < M and cnt[k] != cnt[l] + cnt[r]:
+            problems.append(f"count mismatch at node {k}")
+            break
+    # bucket occupancy: leaves above max_depth respect bucket_size
+    depth = np.floor(np.log2(np.arange(M) + 1)).astype(int)
+    over = leaf & (cnt > tree.bucket_size) & (depth < tree.max_depth)
+    if over.any():
+        problems.append("oversized leaf above max depth")
+    # membership consistency: walking the split planes from the root lands
+    # each point in its recorded leaf
+    rng = np.random.default_rng(0)
+    sample = rng.choice(pts.shape[0], size=min(256, pts.shape[0]), replace=False)
+    for i in sample:
+        k = 0
+        while not leaf[k]:
+            k = 2 * k + 1 + int(pts[i, sd[k]] > sv[k])
+            if k >= M:
+                problems.append("walk fell off tree")
+                break
+        else:
+            if k != leaf_id[i]:
+                problems.append(f"walk landed at {k}, recorded {leaf_id[i]}")
+                break
+    return {"ok": not problems, "problems": problems}

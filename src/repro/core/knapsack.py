@@ -1,0 +1,94 @@
+"""Greedy knapsack on a weighted space-filling curve (paper §III-C).
+
+The SFC lays the elements on a weighted line segment. A parallel prefix
+sum gives each element its global rank/weight offset; slicing the segment
+into ``P`` nearly equal weights (without violating the key order) yields
+the partitions. The paper's guarantee — *"the load on any two processes
+differs by at most the maximum weight of any point"* — is property-tested
+in ``tests/test_knapsack.py``.
+
+Everything here is fixed-shape, jit-able jnp; the Pallas kernel
+``repro.kernels.knapsack_scan`` implements the blocked prefix-scan +
+boundary pick for the hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def slice_weighted_curve(weights: jax.Array, num_parts: int) -> jax.Array:
+    """Slice a weight sequence (already in SFC order) into contiguous parts.
+
+    Returns part_id (n,) int32, non-decreasing. Part boundaries are the
+    greedy choice: element i goes to part floor(prefix_exclusive(i) /
+    (total / P)) clipped to P-1 — each part's load misses the ideal by at
+    most one element weight.
+    """
+    w = weights.astype(jnp.float32)
+    prefix = jnp.cumsum(w) - w  # exclusive prefix
+    total = prefix[-1] + w[-1]
+    ideal = total / num_parts
+    ideal = jnp.where(ideal > 0, ideal, 1.0)
+    # midpoint rule: assign by the element's center of mass on the segment
+    part = jnp.floor((prefix + 0.5 * w) / ideal).astype(jnp.int32)
+    return jnp.clip(part, 0, num_parts - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def part_boundaries(weights: jax.Array, num_parts: int) -> jax.Array:
+    """First element index of each part (P+1 entries, last = n)."""
+    part = slice_weighted_curve(weights, num_parts)
+    n = weights.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # boundary[p] = first i with part[i] >= p
+    starts = jnp.searchsorted(part, jnp.arange(num_parts, dtype=jnp.int32), side="left")
+    del idx
+    return jnp.concatenate([starts.astype(jnp.int32), jnp.array([n], dtype=jnp.int32)])
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def part_loads(weights: jax.Array, part: jax.Array, num_parts: int) -> jax.Array:
+    """Load (sum of weights) per part."""
+    return jax.ops.segment_sum(
+        weights.astype(jnp.float32), part, num_segments=num_parts
+    )
+
+
+def greedy_bins(weights: jax.Array, num_bins: int) -> jax.Array:
+    """Non-contiguous greedy knapsack: heaviest-first into the lightest bin.
+
+    Used where curve order need not be preserved (e.g. assigning top tree
+    nodes to processes in partitioner_init, serving-batch admission).
+    Host-side O(n log n + n·B); returns bin id per element.
+    """
+    import numpy as np
+
+    w = np.asarray(weights, dtype=np.float64)
+    order = np.argsort(-w, kind="stable")
+    loads = np.zeros(num_bins)
+    out = np.zeros(w.shape[0], dtype=np.int32)
+    for i in order:
+        b = int(np.argmin(loads))
+        loads[b] += w[i]
+        out[i] = b
+    return jnp.asarray(out)
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def incremental_reslice(
+    weights: jax.Array, old_part: jax.Array, num_parts: int
+) -> tuple[jax.Array, jax.Array]:
+    """Incremental load balancing (paper §IV): keep the existing curve
+    order, recompute ranks on the new weighted segment, re-slice.
+
+    Returns (new_part, moved_mask). Because the order is preserved, an
+    element can only move to a rank-adjacent part in the best case —
+    migration is restricted to neighbors P±1 for small load deltas (the
+    paper's locality claim, asserted in tests).
+    """
+    new_part = slice_weighted_curve(weights, num_parts)
+    return new_part, new_part != old_part

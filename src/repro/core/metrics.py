@@ -1,0 +1,99 @@
+"""Partition-quality metrics (paper §II and §V-B tables).
+
+* load balance: AvgLoad / MaxLoad (paper Tables II-VII columns).
+* MaxDegree: max over parts of the number of distinct neighbor parts a
+  part communicates with (number of messages).
+* MaxEdgeCut: max over parts of the summed weight of its outgoing cut
+  edges (communication volume), eq. (1) of the paper.
+* load imbalance: max_i,j (w_i - w_j), eq. (2).
+* surface-to-volume proxy for point sets: fraction of k-NN edges that
+  cross partitions (detects the "misshapen partitions" of §IV).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def loads(part: jax.Array, weights: jax.Array, num_parts: int) -> jax.Array:
+    return jax.ops.segment_sum(weights.astype(jnp.float32), part, num_segments=num_parts)
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def load_imbalance(part: jax.Array, weights: jax.Array, num_parts: int) -> jax.Array:
+    """Paper eq. (2): max pairwise load difference."""
+    ld = loads(part, weights, num_parts)
+    return jnp.max(ld) - jnp.min(ld)
+
+
+def edge_metrics(
+    part: np.ndarray,
+    edges_src: np.ndarray,
+    edges_dst: np.ndarray,
+    num_parts: int,
+    edge_weights: np.ndarray | None = None,
+) -> dict:
+    """MaxDegree / MaxEdgeCut / TotalCut over a directed edge list.
+
+    Host-side numpy (benchmark/reporting path, not the training hot loop).
+    """
+    ps = part[edges_src]
+    pd = part[edges_dst]
+    cut = ps != pd
+    if edge_weights is None:
+        edge_weights = np.ones(edges_src.shape[0], dtype=np.float64)
+    # outgoing cut volume per part (paper's e_i)
+    e = np.bincount(ps[cut], weights=edge_weights[cut], minlength=num_parts)
+    # distinct neighbor parts per part
+    pairs = np.unique(np.stack([ps[cut], pd[cut]], axis=1), axis=0)
+    deg = np.bincount(pairs[:, 0], minlength=num_parts)
+    return {
+        "MaxEdgeCut": float(e.max()) if e.size else 0.0,
+        "TotalCut": float(e.sum()),
+        "MaxDegree": int(deg.max()) if deg.size else 0,
+        "AvgDegree": float(deg.mean()) if deg.size else 0.0,
+    }
+
+
+def partition_report(
+    part: np.ndarray,
+    weights: np.ndarray,
+    num_parts: int,
+    edges: tuple[np.ndarray, np.ndarray] | None = None,
+) -> dict:
+    ld = np.bincount(part, weights=weights, minlength=num_parts)
+    rep = {
+        "AvgLoad": float(ld.mean()),
+        "MaxLoad": float(ld.max()),
+        "MinLoad": float(ld.min()),
+        "Imbalance": float(ld.max() - ld.min()),
+    }
+    if edges is not None:
+        rep.update(edge_metrics(part, edges[0], edges[1], num_parts))
+    return rep
+
+
+def knn_cross_fraction(
+    points: np.ndarray, part: np.ndarray, k: int = 6, sample: int = 2048, seed: int = 0
+) -> float:
+    """Surface-to-volume proxy: fraction of k-NN edges crossing partitions.
+
+    Sampled, brute-force on the host — this is a *diagnostic* (paper §IV:
+    detect misshapen partitions and trigger a full rebalance).
+    """
+    rng = np.random.default_rng(seed)
+    n = points.shape[0]
+    ids = rng.choice(n, size=min(sample, n), replace=False)
+    cross = 0
+    total = 0
+    for i in ids:
+        d2 = np.sum((points - points[i]) ** 2, axis=1)
+        nn = np.argpartition(d2, k + 1)[: k + 1]
+        nn = nn[nn != i][:k]
+        cross += int((part[nn] != part[i]).sum())
+        total += len(nn)
+    return cross / max(total, 1)

@@ -1,0 +1,135 @@
+"""Data migration with bounded message sizes (paper §III-C, transfer_t_l_t).
+
+The paper exchanges data in *rounds*, capping the largest message at
+MAX_MSG_SIZE to bound buffer memory and avoid network congestion. On TPU
+the analogue is a sequence of fixed-capacity ``all_to_all`` chunks. This
+module computes the plan (who sends how much to whom, in how many rounds)
+and provides both a host-side simulator (used by tests/benchmarks to
+check conservation and round counts) and a shard_map executor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MigrationPlan:
+    send_counts: np.ndarray   # (P, P) elements moving src -> dst
+    rounds: int               # number of bounded all_to_all rounds
+    chunk: int                # per-pair element capacity per round
+    total_moved: int
+    max_pair: int
+
+    @property
+    def stay_fraction(self) -> float:
+        total = self.send_counts.sum()
+        stay = np.trace(self.send_counts)
+        return float(stay) / max(float(total), 1.0)
+
+
+def migration_plan(
+    old_part: np.ndarray,
+    new_part: np.ndarray,
+    num_parts: int,
+    *,
+    max_msg_bytes: int = 4 << 20,
+    bytes_per_elem: int = 16,
+) -> MigrationPlan:
+    """Count matrix + round schedule honoring MAX_MSG_SIZE."""
+    old = np.asarray(old_part)
+    new = np.asarray(new_part)
+    send = np.zeros((num_parts, num_parts), dtype=np.int64)
+    np.add.at(send, (old, new), 1)
+    off_diag = send.copy()
+    np.fill_diagonal(off_diag, 0)
+    max_pair = int(off_diag.max()) if off_diag.size else 0
+    chunk = max(1, max_msg_bytes // bytes_per_elem)
+    rounds = int(np.ceil(max_pair / chunk)) if max_pair else 0
+    return MigrationPlan(
+        send_counts=send,
+        rounds=rounds,
+        chunk=chunk,
+        total_moved=int(off_diag.sum()),
+        max_pair=max_pair,
+    )
+
+
+def neighbor_locality(plan: MigrationPlan) -> float:
+    """Fraction of moved elements that travel to a rank-adjacent part.
+
+    The paper's incremental load balancing claims migration is restricted
+    to P±1 neighbors for small load deltas; tests assert this is 1.0 after
+    an `incremental_reslice` with modest weight changes.
+    """
+    P = plan.send_counts.shape[0]
+    moved = 0
+    near = 0
+    for s in range(P):
+        for d in range(P):
+            if s == d:
+                continue
+            moved += plan.send_counts[s, d]
+            if abs(s - d) == 1:
+                near += plan.send_counts[s, d]
+    return float(near) / max(float(moved), 1.0)
+
+
+def simulate_rounds(plan: MigrationPlan) -> list[np.ndarray]:
+    """Split the send matrix into per-round matrices, each pair <= chunk."""
+    remaining = plan.send_counts.copy()
+    np.fill_diagonal(remaining, 0)
+    out = []
+    for _ in range(plan.rounds):
+        step = np.minimum(remaining, plan.chunk)
+        out.append(step)
+        remaining -= step
+    assert remaining.sum() == 0 or plan.rounds == 0
+    return out
+
+
+def execute_shard_exchange(
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    payload: jax.Array,
+    dest: jax.Array,
+    capacity: int,
+    fill_value=0,
+):
+    """shard_map executor: move rows of ``payload`` (sharded on dim 0 over
+    ``axis``) to the shard given by ``dest`` using one padded all_to_all.
+
+    Returns (received_payload (nshards*capacity, ...), valid_mask). The
+    caller picks ``capacity`` from the migration plan (chunk size); calling
+    this in a loop over rounds gives the paper's bounded-message exchange.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    nshards = mesh.shape[axis]
+
+    def kernel(x, d):
+        n_loc = x.shape[0]
+        order = jnp.argsort(d, stable=True)
+        xs, ds = x[order], d[order]
+        pos = jnp.arange(n_loc) - jnp.searchsorted(
+            ds, jnp.arange(nshards, dtype=ds.dtype)
+        )[ds]
+        buf = jnp.full((nshards, capacity) + x.shape[1:], fill_value, x.dtype)
+        val = jnp.zeros((nshards, capacity), dtype=bool)
+        buf = buf.at[ds, pos].set(xs, mode="drop")
+        val = val.at[ds, pos].set(True, mode="drop")
+        rbuf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
+        rval = jax.lax.all_to_all(val, axis, split_axis=0, concat_axis=0)
+        return rbuf.reshape((-1,) + x.shape[1:]), rval.reshape(-1)
+
+    fn = jax.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )
+    return fn(payload, dest)

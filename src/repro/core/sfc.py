@@ -1,0 +1,251 @@
+"""Space-filling-curve key generation (paper §III-B).
+
+Two curves are supported, as in the paper:
+
+* **Morton** (default) — bit-interleave of quantized coordinates.
+* **Hilbert-like** — the paper generalizes the geometric Hilbert
+  construction to random point distributions and arbitrary dimension.
+  We implement it in closed form with Skilling's transpose algorithm
+  (Gray-code sub-cell visiting order — identical to the recursive
+  tree-traversal rules for regular midpoint trees), plus the paper's
+  "statistics" extension: quantizing coordinates in *rank space*
+  (per-dimension empirical CDF) makes the curve adapt to clustered
+  distributions exactly like median splitters do for kd-trees.
+
+Keys are uint32 words. ``words=1`` packs ``d * bits <= 32`` bits into a
+single word; ``words=2`` returns a ``(n, 2)`` array of (hi, lo) words for
+up to 64 bits of resolution. All functions are jit-able and fixed-shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Stats = Literal["geometric", "rank"]
+
+
+def max_bits_per_dim(d: int, words: int = 1) -> int:
+    """Largest per-dimension resolution that fits the key width."""
+    return min(32, (32 * words) // d)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (geometry or data statistics)
+# ---------------------------------------------------------------------------
+
+def quantize(points: jax.Array, bits: int, stats: Stats = "geometric") -> jax.Array:
+    """Map (n, d) float points to (n, d) uint32 cell coordinates in [0, 2^bits).
+
+    ``geometric``: affine map from the bounding box (the paper's default
+    geometric quantization — equivalent to midpoint splitters).
+    ``rank``: per-dimension rank transform (empirical CDF) — equivalent to
+    exact-median splitters; robust to clustered distributions.
+    """
+    n, d = points.shape
+    if stats == "geometric":
+        lo = jnp.min(points, axis=0)
+        hi = jnp.max(points, axis=0)
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        unit = (points - lo) / span
+        q = jnp.clip((unit * (2**bits)).astype(jnp.uint32), 0, 2**bits - 1)
+        return q
+    elif stats == "rank":
+        order = jnp.argsort(points, axis=0)
+        ranks = jnp.zeros((n, d), dtype=jnp.uint32)
+        ranks = ranks.at[order, jnp.arange(d)[None, :]].set(
+            jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32)[:, None], (n, d))
+        )
+        # scale ranks to [0, 2^bits). float32 is exact for n < 2^24; for
+        # larger n the rank transform loses a few low bits of resolution,
+        # which only perturbs intra-bucket order (harmless for partitioning).
+        denom = max(n - 1, 1)
+        q = (ranks.astype(jnp.float32) * ((2**bits - 1) / denom)).astype(jnp.uint32)
+        return q
+    else:  # pragma: no cover - guarded by Literal
+        raise ValueError(f"unknown stats mode {stats!r}")
+
+
+# ---------------------------------------------------------------------------
+# Morton (bit interleave)
+# ---------------------------------------------------------------------------
+
+def _interleave(q: jax.Array, bits: int, words: int) -> jax.Array:
+    """Bit-interleave (n, d) uint32 cells into (n, words) uint32 keys.
+
+    Output bit layout (global bit index g, counting from the MSB of the
+    key): g-th bit = bit (bits-1 - g//d) of dimension (g % d). hi word
+    first.  Pure jnp; the Pallas kernel in ``repro.kernels.morton``
+    implements the same layout.
+    """
+    n, d = q.shape
+    total = bits * d
+    width = 32 * words
+    # bit b (from MSB of dim i at position bits-1-k) lands at global slot
+    # g = k*d + i ; key bit position (from MSB of the key) = g, i.e. from
+    # LSB: width-1 - (offset + g) with offset right-aligning the payload.
+    offset = width - total
+    out = jnp.zeros((n, words), dtype=jnp.uint32)
+    for k in range(bits):  # static python loop: bits <= 32
+        src_bit = bits - 1 - k
+        comp = (q >> src_bit) & 1  # (n, d)
+        for i in range(d):
+            g = k * d + i
+            pos_from_msb = offset + g
+            word = pos_from_msb // 32
+            bit_in_word = 31 - (pos_from_msb % 32)
+            out = out.at[:, word].set(out[:, word] | (comp[:, i] << bit_in_word))
+    return out
+
+
+def morton_key(
+    points: jax.Array,
+    bits: int | None = None,
+    *,
+    stats: Stats = "geometric",
+    words: int = 1,
+) -> jax.Array:
+    """Morton SFC keys for (n, d) points. Returns (n,) uint32 if words==1
+    else (n, words) uint32 with hi word first."""
+    n, d = points.shape
+    if bits is None:
+        bits = max_bits_per_dim(d, words)
+    assert bits * d <= 32 * words, f"{bits} bits x {d} dims > {32*words} bit key"
+    q = quantize(points, bits, stats)
+    keys = _interleave(q, bits, words)
+    return keys[:, 0] if words == 1 else keys
+
+
+# ---------------------------------------------------------------------------
+# Hilbert-like (Skilling transpose algorithm, arbitrary dimension)
+# ---------------------------------------------------------------------------
+
+def _hilbert_transpose(q: jax.Array, bits: int) -> jax.Array:
+    """Convert (n, d) uint32 cell coords into the Hilbert 'transpose' form.
+
+    Skilling's inverse-undo + Gray-encode. After this, bit-interleaving
+    the transposed coords (dim 0 first) yields the Hilbert index. Static
+    loops over bits and dims; fully vectorized over points.
+    """
+    n, d = q.shape
+    X = [q[:, i] for i in range(d)]
+    M = jnp.uint32(1 << (bits - 1))
+
+    # Inverse undo excess work
+    Q = 1 << (bits - 1)
+    while Q > 1:
+        Pmask = jnp.uint32(Q - 1)
+        Qm = jnp.uint32(Q)
+        for i in range(d):
+            cond = (X[i] & Qm) != 0
+            # if bit set: invert low bits of X[0]; else swap low bits X[0]<->X[i]
+            t = (X[0] ^ X[i]) & Pmask
+            X0_if = X[0] ^ Pmask
+            X0_else = X[0] ^ t
+            Xi_else = X[i] ^ t
+            X[0] = jnp.where(cond, X0_if, X0_else)
+            if i != 0:
+                X[i] = jnp.where(cond, X[i], Xi_else)
+        Q >>= 1
+
+    # Gray encode
+    for i in range(1, d):
+        X[i] = X[i] ^ X[i - 1]
+    t = jnp.zeros((n,), dtype=jnp.uint32)
+    Q = 1 << (bits - 1)
+    while Q > 1:
+        Qm = jnp.uint32(Q)
+        t = jnp.where((X[d - 1] & Qm) != 0, t ^ jnp.uint32(Q - 1), t)
+        Q >>= 1
+    for i in range(d):
+        X[i] = X[i] ^ t
+    del M
+    return jnp.stack(X, axis=1)
+
+
+def hilbert_key(
+    points: jax.Array,
+    bits: int | None = None,
+    *,
+    stats: Stats = "geometric",
+    words: int = 1,
+) -> jax.Array:
+    """Hilbert-like SFC keys for (n, d) points (paper §III-B).
+
+    ``stats='rank'`` gives the paper's distribution-aware variant for
+    clustered data / unstructured meshes.
+    """
+    n, d = points.shape
+    if bits is None:
+        bits = max_bits_per_dim(d, words)
+    assert bits * d <= 32 * words
+    q = quantize(points, bits, stats)
+    tq = _hilbert_transpose(q, bits)
+    keys = _interleave(tq, bits, words)
+    return keys[:, 0] if words == 1 else keys
+
+
+def hilbert_key_from_cells(q: jax.Array, bits: int, *, words: int = 1) -> jax.Array:
+    """Hilbert keys directly from pre-quantized uint32 cells (n, d)."""
+    tq = _hilbert_transpose(q, bits)
+    keys = _interleave(tq, bits, words)
+    return keys[:, 0] if words == 1 else keys
+
+
+def morton_key_from_cells(q: jax.Array, bits: int, *, words: int = 1) -> jax.Array:
+    """Morton keys directly from pre-quantized uint32 cells (n, d)."""
+    keys = _interleave(q, bits, words)
+    return keys[:, 0] if words == 1 else keys
+
+
+# ---------------------------------------------------------------------------
+# Key ordering helpers
+# ---------------------------------------------------------------------------
+
+def argsort_keys(keys: jax.Array) -> jax.Array:
+    """Stable argsort for single-word (n,) or multi-word (n, w) keys."""
+    if keys.ndim == 1:
+        return jnp.argsort(keys, stable=True)
+    # lexicographic, hi word first: sort by last word, then next, ...
+    order = jnp.argsort(keys[:, -1], stable=True)
+    for w in range(keys.shape[1] - 2, -1, -1):
+        order = order[jnp.argsort(keys[order, w], stable=True)]
+    return order
+
+
+def sfc_order(
+    points: jax.Array,
+    *,
+    curve: Literal["morton", "hilbert"] = "morton",
+    bits: int | None = None,
+    stats: Stats = "geometric",
+    words: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Return (perm, keys): permutation of point ids in SFC order + keys."""
+    fn = morton_key if curve == "morton" else hilbert_key
+    keys = fn(points, bits, stats=stats, words=words)
+    return argsort_keys(keys), keys
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def point_key_morton3d(points: jax.Array, lo: jax.Array, hi: jax.Array, bits: int = 10):
+    """Convenience: Morton key of query points against a fixed bbox (used by
+    point location, which must quantize queries with the *tree's* bbox)."""
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    unit = jnp.clip((points - lo) / span, 0.0, 1.0 - 1e-7)
+    q = (unit * (2**bits)).astype(jnp.uint32)
+    return morton_key_from_cells(q, bits)
+
+
+def locality_score(points: jax.Array, perm: jax.Array) -> jax.Array:
+    """Mean Euclidean jump between successive points along the curve.
+
+    Lower is better spatial locality; used to validate Hilbert < Morton
+    (paper: 'SFCs produced by Hilbert-like curves have better spatial
+    locality').
+    """
+    p = points[perm]
+    return jnp.mean(jnp.linalg.norm(p[1:] - p[:-1], axis=-1))

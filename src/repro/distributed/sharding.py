@@ -1,0 +1,295 @@
+"""Sharding rules: logical model axes -> mesh axes.
+
+Rules live in config (``ShardingRules``), not in model code, so the perf
+hillclimb can move axes without touching models. Conventions:
+
+* params are 2-D sharded FSDP x TP: the "d_model-ish" dim over
+  ``rules.fsdp`` (usually "data"), the "wide" dim (heads/ffn/vocab/
+  experts) over ``rules.tp`` (usually "model"). Optimizer state mirrors
+  params. The "pod" axis is pure DCN data parallel (batch only).
+* activations are constrained at block boundaries to
+  P(batch=rules.batch, seq=rules.seq) — sequence parallelism keeps the
+  remat stash per device O(S/model) for long sequences.
+* decode caches shard batch over ``rules.cache_batch`` and KV heads /
+  SSM heads over ``rules.cache_heads``.
+
+GSPMD handles non-divisible dims by padding (e.g. 56 heads on 16-way TP);
+the roofline notes where that costs real FLOPs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingRules
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh, rules: ShardingRules):
+    """Enable activation sharding constraints inside model code."""
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def _current() -> tuple[Mesh, ShardingRules] | None:
+    return getattr(_CTX, "val", None)
+
+
+def _axes_in(mesh: Mesh, axes) -> Any:
+    """Filter a spec entry to axes that exist in the mesh."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    got = tuple(a for a in axes if a in mesh.axis_names)
+    return got if got else None
+
+
+def constrain(x: jax.Array, *spec_entries) -> jax.Array:
+    """with_sharding_constraint if an activation mesh is active, else no-op."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    entries = tuple(_axes_in(mesh, e) for e in spec_entries)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """(B, S, D) block-boundary constraint: batch x seq sharding."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim == 3:
+        return constrain(x, rules.batch, rules.seq, None)
+    return x
+
+
+def constrain_blocked_attention(
+    qb: jax.Array, kb: jax.Array, vb: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Constraints for the blocked flash-attention tensors.
+
+    qb (nq, B, KV, G, bq, hd), kb/vb (nk, B, KV, bk, hd). Without these,
+    GSPMD shards the stacked-block dim and the per-block dynamic_slice
+    triggers 'involuntary full rematerialization' (replicate + repartition
+    of the whole q tensor per block — an XLA SPMD warning and a large
+    collective term). Pin: block dim replicated, batch on rules.batch,
+    KV heads on rules.tp when divisible.
+    """
+    ctx = _current()
+    if ctx is None:
+        return qb, kb, vb
+    mesh, rules = ctx
+    if not rules.blocked_attn:
+        return qb, kb, vb
+    ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = _axes_in(mesh, rules.tp)
+    kv = qb.shape[2]
+    heads_ax = tp if (tp is not None and kv % ax_size.get(tp, 1) == 0) else None
+    qb = constrain(qb, None, rules.batch, heads_ax, None, None, None)
+    kb = constrain(kb, None, rules.batch, heads_ax, None, None)
+    vb = constrain(vb, None, rules.batch, heads_ax, None, None)
+    return qb, kb, vb
+
+
+def constrain_moe(x: jax.Array, kind: str, num_experts: int) -> jax.Array:
+    """Sharding constraints for MoE dispatch intermediates.
+
+    GSPMD loses propagation through the per-row sort/scatter chain and
+    falls back to full replication (measured 320 GiB for the (B, E, C,
+    2F) expert activation at mixtral train_4k). Layouts:
+      'tokens'  (B, TK, D)      -> (batch, None, None)
+      'buf'     (B, E, C, D)    -> (batch, expert?, None, None)
+      'h'       (B, E, C, F)    -> (batch, expert?, None, tp-if-no-EP)
+    Expert axis is used only when E divides it (qwen3 128e); otherwise
+    the FFN dim takes the TP axis (mixtral 8e).
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = _axes_in(mesh, rules.expert)
+    ep_ok = ep is not None and num_experts % ax_size.get(ep, 1) == 0
+    e_ax = ep if ep_ok else None
+    f_ax = None if ep_ok else rules.tp
+    if kind == "tokens":
+        return constrain(x, rules.batch, None, None)
+    if kind == "buf":
+        return constrain(x, rules.batch, e_ax, None, None)
+    if kind == "h":
+        return constrain(x, rules.batch, e_ax, None, f_ax)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim.
+
+    pjit argument shardings are strict (unlike internal GSPMD propagation,
+    which pads); replication on the offending dim is always legal and the
+    roofline reports the cost (e.g. minicpm's odd 122,753 vocab).
+    """
+    ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = 1
+        for a in axes:
+            total *= ax_size.get(a, 1)
+        out.append(entry if total and shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def _param_spec(path: str, leaf, cfg: ModelConfig, rules: ShardingRules) -> P:
+    """PartitionSpec for one parameter, keyed by its tree path."""
+    fsdp, tp, ep = rules.fsdp, rules.tp, rules.expert
+    nd = len(leaf.shape)
+    stacked = path.startswith("blocks") or path.startswith("enc_blocks") or path.startswith("dec_blocks")
+    lead = (None,) if stacked else ()
+
+    name = path.split("/")[-1]
+    # MoE stacked experts (L, E, D, F) — must match before the generic
+    # wi/wo rules below
+    if "moe" in path and nd - len(lead) == 3:
+        if ep is not None and cfg.num_experts % 16 == 0:
+            return P(*lead, ep, fsdp, None)     # expert parallelism
+        return P(*lead, None, fsdp, tp)         # TP within experts (mixtral)
+    if name in ("embed",):
+        return P(tp, fsdp)                      # (V, D)
+    if name in ("lm_head",):
+        return P(fsdp, tp)                      # (D, V)
+    if name in ("wq", "wk", "wv", "wi", "w_in", "w_z", "w_x", "w_b", "w_c", "w_dt"):
+        return P(*lead, fsdp, tp)               # (D, wide)
+    if name in ("wo", "w_out"):
+        return P(*lead, tp, fsdp)               # (wide, D)
+    if name == "router":
+        return P(*lead, fsdp, None)             # (D, E) — replicate experts dim
+    # norms / scalars / vectors: replicate (tiny)
+    return P(*([None] * nd))
+
+
+def param_shardings(
+    mesh: Mesh, cfg: ModelConfig, rules: ShardingRules, params_shapes: Any
+) -> Any:
+    """Pytree of NamedSharding matching a params (shape) pytree."""
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = _param_spec(pstr, leaf, cfg, rules)
+        spec = P(*(_axes_in(mesh, e) for e in spec))
+        spec = _sanitize(spec, tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(mesh: Mesh, cfg, rules, opt_shapes: Any, param_sh: Any) -> Any:
+    """Optimizer state mirrors param shardings (master/m/v); step replicated."""
+    rep = NamedSharding(mesh, P())
+    return {
+        "master": param_sh,
+        "m": param_sh,
+        "v": param_sh,
+        "step": rep,
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, rules: ShardingRules, batch_shapes: dict) -> dict:
+    b = _axes_in(mesh, rules.batch)
+    out = {}
+    for k, v in batch_shapes.items():
+        if k == "cache":
+            out[k] = cache_shardings(mesh, cfg, rules, v)
+            continue
+        if k in ("token", "pos"):
+            spec = P(b)
+        elif hasattr(v, "ndim") and v.ndim == 3:  # frames / patches (B, T, D)
+            spec = P(b, None, None)
+        else:  # tokens / labels / mask (B, S)
+            spec = P(b, None)
+        spec = _sanitize(spec, tuple(v.shape), mesh)  # long_500k has B=1
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def logits_sharding(mesh: Mesh, cfg: ModelConfig, rules: ShardingRules, shape: tuple) -> NamedSharding:
+    """(B, S, V) prefill logits: batch x vocab sharded, sanitized for odd
+    vocab sizes (whisper 51,865; minicpm 122,753)."""
+    b = _axes_in(mesh, rules.batch)
+    tp = _axes_in(mesh, rules.tp)
+    spec = _sanitize(P(b, None, tp), shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, rules: ShardingRules, cache_shapes: Any) -> Any:
+    cb = _axes_in(mesh, rules.cache_batch)
+    ch = _axes_in(mesh, rules.cache_heads)
+    ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _fits(axes, dim) -> bool:
+        if axes is None:
+            return False
+        alist = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = 1
+        for a in alist:
+            total *= ax_size.get(a, 1)
+        return dim % total == 0
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name in ("k", "v") and nd == 5:      # (L, B, S, KV, hd)
+            L, B, S, KV, hd = leaf.shape
+            b = cb if _fits(cb, B) else None
+            # prefer KV-head sharding; fall back to sequence sharding when
+            # heads don't divide (GQA kv=1..4) or batch can't shard (B=1)
+            if _fits(ch, KV):
+                spec = P(None, b, None, ch, None)
+            elif _fits(ch, S):
+                spec = P(None, b, ch, None, None)
+            else:
+                spec = P(None, b, None, None, None)
+            return NamedSharding(mesh, spec)
+        if name == "state" and nd == 5:          # (L, B, nh, hp, N)
+            L, B, nh, hp, N = leaf.shape
+            b = cb if _fits(cb, B) else None
+            h = ch if _fits(ch, nh) else None
+            return NamedSharding(mesh, P(None, b, h, None, None))
+        if name == "memory" and nd == 3:         # (B, T_enc, D)
+            B = leaf.shape[0]
+            b = cb if _fits(cb, B) else None
+            return NamedSharding(mesh, P(b, None, None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

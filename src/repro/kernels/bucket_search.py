@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: batched binary search of query keys over sorted
+bucket boundary keys — the point-location inner loop (paper §V-A).
+
+Each grid cell stages a block of query keys plus the *entire* boundary
+directory into VMEM (the directory is n/BUCKETSIZE entries — 250M points
+at BUCKETSIZE=32 is 7.8M boundaries, so production use tiles a two-level
+directory; this kernel handles directories up to DIR_MAX that fit VMEM,
+which covers every in-memory case in the paper's experiments).
+
+The search is branch-free: log2(B) rounds of midpoint probes with
+vectorized gathers, identical control flow for every lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 2048
+DIR_MAX = 1 << 20  # 1M boundaries * 4B = 4 MiB of VMEM
+
+
+def _search_kernel(q_ref, dir_ref, out_ref, *, steps: int, nb: int):
+    q = q_ref[...]          # (BLOCK_Q,) uint32 query keys
+    d = dir_ref[...]        # (NB,) uint32 sorted boundary keys
+    lo = jnp.zeros_like(q, dtype=jnp.int32)
+    step = jnp.int32(1 << (steps - 1))
+    for _ in range(steps):
+        mid = lo + step
+        mid_c = jnp.minimum(mid, nb - 1)
+        probe = d[mid_c]
+        go = (probe <= q) & (mid <= nb - 1)
+        lo = jnp.where(go, mid, lo)
+        step = step // 2
+    out_ref[...] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_search(qkeys: jax.Array, boundary_keys: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """For each query key, index of the last boundary <= key (uint32)."""
+    q = qkeys.shape[0]
+    nb = boundary_keys.shape[0]
+    assert nb <= DIR_MAX, "two-level directory required beyond DIR_MAX"
+    steps = max(1, (nb - 1).bit_length())
+    q_pad = pl.cdiv(q, BLOCK_Q) * BLOCK_Q
+    qk = jnp.zeros((q_pad,), jnp.uint32).at[:q].set(qkeys)
+    out = pl.pallas_call(
+        functools.partial(_search_kernel, steps=steps, nb=nb),
+        grid=(q_pad // BLOCK_Q,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q,), lambda i: (i,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_Q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+        interpret=interpret,
+    )(qk, boundary_keys)
+    return out[:q]

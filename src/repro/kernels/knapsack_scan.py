@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: blocked weighted prefix-scan + greedy knapsack slice.
+
+The load-balancing step (paper §III-C) ranks every element on the
+weighted curve and slices it into P parts. Two-pass blocked scan:
+
+  pass 1 (jnp): per-block weight sums -> exclusive block offsets
+                (a tiny (n/BLOCK,) cumsum, negligible next to the data).
+  pass 2 (Pallas): each block loads its weights into VMEM, computes the
+                in-block inclusive scan on the VPU, adds its offset and
+                emits part ids  floor((prefix - w/2) / ideal).
+
+The sequential dependency between blocks is carried through the
+precomputed offsets, so pass 2 is embarrassingly parallel over the grid —
+the TPU form of the paper's 'parallel prefix computation'.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096
+
+
+def _scan_slice_kernel(w_ref, off_ref, scal_ref, out_ref):
+    w = w_ref[...]                       # (BLOCK_N,) f32
+    off = off_ref[0]                     # scalar: exclusive offset of this block
+    ideal = scal_ref[0]                  # total / num_parts
+    maxp = scal_ref[1]                   # num_parts - 1
+    incl = jnp.cumsum(w)
+    center = off + incl - 0.5 * w        # prefix_exclusive + w/2
+    part = jnp.floor(center / ideal)
+    part = jnp.clip(part, 0.0, maxp)
+    out_ref[...] = part.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts", "interpret"))
+def knapsack_parts(
+    weights: jax.Array, num_parts: int, *, interpret: bool = True
+) -> jax.Array:
+    """(n,) float32 weights in curve order -> (n,) int32 part ids."""
+    n = weights.shape[0]
+    n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    w = jnp.zeros((n_pad,), jnp.float32).at[:n].set(weights.astype(jnp.float32))
+    nb = n_pad // BLOCK_N
+    blocks = w.reshape(nb, BLOCK_N)
+    bsums = jnp.sum(blocks, axis=1)
+    offsets = jnp.cumsum(bsums) - bsums          # exclusive
+    total = jnp.sum(bsums)
+    ideal = jnp.maximum(total / num_parts, 1e-9)
+    scal = jnp.stack([ideal, jnp.float32(num_parts - 1)])
+    out = pl.pallas_call(
+        _scan_slice_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(w, offsets, scal)
+    return out[:n]

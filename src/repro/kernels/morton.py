@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: Morton (bit-interleave) SFC key generation.
+
+The partitioner's hottest loop is key generation over every element
+(paper §III-B: traversals over 10M–8B points). On TPU this is a pure
+VPU integer workload: each block of quantized cells is staged into VMEM,
+bit-planes are extracted with shifts/masks and OR-combined into the key
+word — no MXU, no cross-element communication, perfectly parallel over
+the 8x128 vector lanes.
+
+Block shape: (BLOCK_N, d) uint32 in / (BLOCK_N,) uint32 out. BLOCK_N=2048
+keeps the working set (2048 * (d+1) * 4B <= ~90 KiB for d=10) far inside
+the ~16 MiB VMEM budget while staying lane-aligned (2048 = 16 * 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 2048
+
+
+def _morton_kernel(cells_ref, out_ref, *, bits: int, d: int):
+    cells = cells_ref[...]  # (BLOCK_N, d) uint32
+    key = jnp.zeros((cells.shape[0],), dtype=jnp.uint32)
+    total = bits * d
+    offset = 32 - total  # left-align payload inside the 32-bit key
+    for k in range(bits):
+        src_bit = bits - 1 - k
+        for i in range(d):
+            g = k * d + i
+            bit_in_word = 31 - (offset + g)
+            comp = (cells[:, i] >> jnp.uint32(src_bit)) & jnp.uint32(1)
+            key = key | (comp << jnp.uint32(bit_in_word))
+    out_ref[...] = key
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def morton_from_cells(cells: jax.Array, bits: int, *, interpret: bool = True) -> jax.Array:
+    """(n, d) uint32 cells -> (n,) uint32 Morton keys via Pallas."""
+    n, d = cells.shape
+    assert bits * d <= 32, "single-word kernel: bits*d must fit 32 bits"
+    n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    cells_p = jnp.zeros((n_pad, d), dtype=jnp.uint32).at[:n].set(cells)
+    out = pl.pallas_call(
+        functools.partial(_morton_kernel, bits=bits, d=d),
+        grid=(n_pad // BLOCK_N,),
+        in_specs=[pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+        interpret=interpret,
+    )(cells_p)
+    return out[:n]

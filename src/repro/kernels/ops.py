@@ -1,0 +1,45 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+harness contract: kernels target TPU, validate in interpret mode). On a
+real TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_COMPILE=1 env) to compile the kernels natively.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sfc as _sfc
+from repro.kernels import bucket_search as _bs
+from repro.kernels import hilbert as _hil
+from repro.kernels import knapsack_scan as _ks
+from repro.kernels import morton as _mor
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def morton_key(points: jax.Array, bits: int | None = None, *, stats: str = "geometric") -> jax.Array:
+    n, d = points.shape
+    if bits is None:
+        bits = _sfc.max_bits_per_dim(d)
+    cells = _sfc.quantize(points, bits, stats)
+    return _mor.morton_from_cells(cells, bits, interpret=INTERPRET)
+
+
+def hilbert_key(points: jax.Array, bits: int | None = None, *, stats: str = "geometric") -> jax.Array:
+    n, d = points.shape
+    if bits is None:
+        bits = _sfc.max_bits_per_dim(d)
+    cells = _sfc.quantize(points, bits, stats)
+    return _hil.hilbert_from_cells(cells, bits, interpret=INTERPRET)
+
+
+def knapsack_parts(weights: jax.Array, num_parts: int) -> jax.Array:
+    return _ks.knapsack_parts(weights, num_parts, interpret=INTERPRET)
+
+
+def bucket_search(qkeys: jax.Array, boundary_keys: jax.Array) -> jax.Array:
+    return _bs.bucket_search(qkeys, boundary_keys, interpret=INTERPRET)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+tests/test_kernels.py across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sfc as _sfc
+
+
+def morton_from_cells(cells: jax.Array, bits: int) -> jax.Array:
+    return _sfc.morton_key_from_cells(cells, bits)
+
+
+def hilbert_from_cells(cells: jax.Array, bits: int) -> jax.Array:
+    return _sfc.hilbert_key_from_cells(cells, bits)
+
+
+def knapsack_parts(weights: jax.Array, num_parts: int) -> jax.Array:
+    from repro.core import knapsack as _knap
+
+    return _knap.slice_weighted_curve(weights, num_parts)
+
+
+def bucket_search(qkeys: jax.Array, boundary_keys: jax.Array) -> jax.Array:
+    idx = jnp.searchsorted(boundary_keys, qkeys, side="right") - 1
+    return jnp.clip(idx, 0, boundary_keys.shape[0] - 1).astype(jnp.int32)

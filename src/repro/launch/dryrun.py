@@ -1,0 +1,339 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory / cost / collective analyses.
+
+MUST set the fake-device flag before any other import (jax locks the
+device count at first init)."""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig, ShardingRules
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import step as train_step_mod
+
+# ---------------------------------------------------------------------------
+# cell enumeration (40 cells; long_500k skips per DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def cells() -> list[tuple[str, str, str]]:
+    """[(arch, shape, status)]; status in {run, skip:<reason>}."""
+    out = []
+    for arch, cfg in ARCHS.items():
+        for sname in SHAPES:
+            if sname == "long_500k" and not cfg.sub_quadratic:
+                out.append((arch, sname, "skip:full-attention arch at 524k decode"))
+            else:
+                out.append((arch, sname, "run"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective parsing from (per-device) optimized HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum *operand* bytes of every collective op, tracking while-loop trip
+    counts so collectives inside scanned layers are multiplied out.
+
+    Loop handling: XLA names fusion/while computations; instructions inside
+    a while body appear inside `%while_body_N { ... }` computations. We
+    detect trip counts from jax scan patterns: the loop condition compares
+    the induction variable against a constant `s32[] constant(K)`. When a
+    trip count can't be inferred, the multiplier defaults to 1 and the op
+    is flagged (count_uncertain).
+    """
+    # map computation name -> text
+    comps: dict[str, str] = {}
+    for m in re.finditer(r"^%?([\w\.\-]+) (?:\([^\n]*\) -> [^\n]*)?\{", hlo_text, re.M):
+        name = m.group(1)
+        start = m.end()
+        depth = 1
+        i = start
+        while depth and i < len(hlo_text):
+            if hlo_text[i] == "{":
+                depth += 1
+            elif hlo_text[i] == "}":
+                depth -= 1
+            i += 1
+        comps[name.strip()] = hlo_text[start:i]
+
+    # find while ops: `while(...)`, with body=%name, condition=%name
+    trip: dict[str, int] = {}  # body computation -> trip count
+    for m in re.finditer(r"while\([^\)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", hlo_text):
+        cond_name, body_name = m.group(1), m.group(2)
+        cond = comps.get(cond_name, "")
+        k = None
+        cm = re.findall(r"constant\((\d+)\)", cond)
+        if cm:
+            k = max(int(c) for c in cm)
+        trip[body_name] = k if k else 1
+
+    totals = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    uncertain = 0
+
+    group_re = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    group_re2 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+    def _group_size(line: str) -> int:
+        m = group_re.search(line)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = group_re2.search(line)
+        if m:
+            return max(len(m.group(1).split(",")), 1)
+        return 1
+
+    def scan_text(text: str, mult: int):
+        nonlocal uncertain
+        for line in text.splitlines():
+            for coll in _COLLECTIVES:
+                # the optimized HLO prints operands as bare names
+                # (`all-gather(%fusion.12)`), so we read the RESULT type
+                # on the lhs and convert to operand bytes per op
+                # semantics: all-gather operand = result/group;
+                # reduce-scatter operand = result*group; others equal.
+                if f" {coll}(" not in line and f" {coll}-start(" not in line:
+                    continue
+                lhs = line.split(f" {coll}", 1)[0]
+                shapes = _SHAPE_RE.findall(lhs)
+                res_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+                g = _group_size(line)
+                if coll == "all-gather":
+                    op_bytes = res_bytes // g
+                elif coll == "reduce-scatter":
+                    op_bytes = res_bytes * g
+                else:  # all-reduce / all-to-all / collective-permute
+                    op_bytes = res_bytes
+                totals[coll] += op_bytes * mult
+                counts[coll] += mult
+                break
+
+    # main entry computation: anything not a while body runs once
+    body_names = set(trip)
+    for name, text in comps.items():
+        mult = trip.get(name, 1)
+        if name in body_names:
+            scan_text(text, mult)
+    # top-level lines (entry computation may not be captured above)
+    entry = hlo_text
+    for name in comps:
+        pass
+    # lines outside any tracked while body: approximate by scanning whole
+    # text once and subtracting the bodies' single-count contribution,
+    # which we already added with multipliers. Simpler: scan only the
+    # entry computation (ENTRY marker).
+    em = re.search(r"ENTRY [^\{]*\{(.*)$", hlo_text, re.S)
+    if em:
+        entry = em.group(1)
+        scan_text(entry, 1)
+
+    totals["total_bytes"] = sum(totals[c] for c in _COLLECTIVES)
+    totals["counts"] = counts
+    totals["uncertain"] = uncertain
+    return totals
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+# grad-accumulation microbatch per arch for train cells: the remat stash
+# and MoE dispatch buffers scale with the live microbatch, not the global
+# batch (memory-roofline lever; see EXPERIMENTS.md §Perf)
+MICROBATCH = {
+    "deepseek-coder-33b": 64,
+    "deepseek-7b": 128,
+    "zamba2-7b": 32,     # peak plateaus below mb=32 (batch-independent SSD transients)
+    "mixtral-8x22b": 32,  # argument-bound (7.2 GiB fp32 Adam); multi-pod halves it
+    "qwen3-moe-30b-a3b": 64,
+    "paligemma-3b": 64,
+}
+
+
+def build_cell_fn(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, rules: ShardingRules,
+    *, microbatch: int | None | str = "default",
+):
+    """Returns (fn, example_args_with_shardings, out_shardings).
+
+    ``microbatch=None`` disables grad accumulation (roofline probes must:
+    the accumulation scan body is counted once by cost analysis).
+    """
+    sds = M.input_specs(cfg, shape)
+    if microbatch == "default":
+        microbatch = MICROBATCH.get(cfg.name) if shape.kind == "train" else None
+    run = RunConfig(model=cfg, shape=shape, rules=rules, microbatch=microbatch)
+
+    params_shapes = jax.eval_shape(
+        lambda: M.get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    )
+    psh = shd.param_shardings(mesh, cfg, rules, params_shapes)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+        osh = shd.opt_state_shardings(mesh, cfg, rules, opt_shapes, psh)
+        bsh = shd.batch_shardings(mesh, cfg, rules, sds)
+        step = train_step_mod.make_train_step(run)
+        in_sh = (psh, osh, bsh)
+        out_sh = (psh, osh, None)
+        args = (params_shapes, opt_shapes, sds)
+        return step, args, in_sh, out_sh
+    if shape.kind == "prefill":
+        rules = replace(rules, blocked_attn=False)  # fwd-only: GSPMD's layout wins
+        bsh = shd.batch_shardings(mesh, cfg, rules, sds)
+        fn = M.prefill_fn(cfg)
+        S_total = shape.seq_len + (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+        logits_sh = shd.logits_sharding(
+            mesh, cfg, rules, (shape.global_batch, S_total, cfg.padded_vocab_size)
+        )
+        return fn, (params_shapes, sds), (psh, bsh), logits_sh
+    # decode
+    bsh = shd.batch_shardings(mesh, cfg, rules, sds)
+    fn = M.serve_step_fn(cfg)
+    out_sh = {"logits": None, "cache": bsh["cache"]}
+    return fn, (params_shapes, sds), (psh, bsh), out_sh
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules: ShardingRules | None = None,
+    hlo_probe: bool = False,
+) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or ShardingRules()
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_cell_fn(cfg, shape, mesh, rules)
+    # donation: train updates (params, opt) in place; decode updates the KV
+    # cache in place. Without it the cache exists twice (measured +16
+    # GiB/device at deepseek-7b decode_32k).
+    donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+    with shd.activation_mesh(mesh, rules):
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": mesh.devices.size,
+        "compile_s": round(t1 - t0, 1),
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes": int(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+        ),
+    }
+    if hlo_probe:
+        rec["collectives"] = parse_collectives(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--hlo", action="store_true", help="parse collective bytes")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    todo = [
+        (a, s, st)
+        for (a, s, st) in cells()
+        if (args.arch is None or a == args.arch)
+        and (args.shape is None or s == args.shape)
+    ]
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r.get("arch"), r.get("shape"), r.get("mesh")) for r in results}
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape_name, status in todo:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape_name, mesh_name) in done:
+                continue
+            if status != "run":
+                results.append(
+                    {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": status}
+                )
+                print(f"[skip] {arch} {shape_name} {mesh_name}: {status}")
+                continue
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=mp, hlo_probe=args.hlo)
+                rec["status"] = "ok"
+                print(
+                    f"[ok]   {arch:22s} {shape_name:12s} {mesh_name:8s} "
+                    f"compile={rec['compile_s']:6.1f}s peak={rec['peak_bytes']/2**30:7.2f}GiB "
+                    f"flops/dev={rec['flops_per_device']:.3e}"
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": f"error: {type(e).__name__}: {e}",
+                }
+                print(f"[ERR]  {arch} {shape_name} {mesh_name}: {e}")
+                traceback.print_exc()
+            results.append(rec)
+            json.dump(results, open(args.out, "w"), indent=1)
+    json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok} ok / {len(results)} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving launcher: knapsack-batched greedy decoding (see
+repro/serve/engine.py). CPU-scale demo entrypoint."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serve.engine import Engine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced(ARCHS[args.arch])
+    rngs = np.random.default_rng(0)
+    params = M.get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_seq=128, batch_size=4)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rngs.integers(0, cfg.vocab_size, rngs.integers(3, 40)).astype(np.int32),
+            max_new_tokens=args.max_new,
+        )
+        for i in range(args.requests)
+    ]
+    results = engine.run(reqs)
+    for rid in sorted(results):
+        print(f"req {rid}: {results[rid]}")
+    print(f"[serve] completed {len(results)} requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Training launcher: wires the data pipeline, train step, checkpointing,
+fault tolerance and the amortized-LB controller around the step loop.
+
+On the CPU container this runs reduced configs end-to-end (see
+examples/train_lm.py); on a real pod the same entrypoint takes
+``--arch <id>`` with the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import ARCHS, SHAPES, reduced
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.dynamic import AmortizedController
+from repro.data import pipeline as dp
+from repro.runtime import fault_tolerance as ft
+from repro.train import step as ts
+
+
+def train_loop(
+    run: RunConfig,
+    *,
+    steps: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    log_every: int = 10,
+    resume: bool = True,
+    data_cfg: dp.DataConfig | None = None,
+) -> dict:
+    cfg = run.model
+    shape = run.shape
+    data_cfg = data_cfg or dp.DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=run.seed,
+    )
+    rng = jax.random.PRNGKey(run.seed)
+    params, opt_state = ts.init_all(run, rng)
+    start_step = 0
+    acp = ckpt.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir and resume:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                {"params": params, "opt": opt_state},
+            )
+            tree, extra = ckpt.restore(ckpt_dir, latest, like)
+            params, opt_state = tree["params"], tree["opt"]
+            start_step = int(extra.get("data_step", latest))
+            print(f"[train] resumed from step {latest}")
+
+    # no donate_argnums on the runtime path: identical init constants
+    # (e.g. the ln1/ln2 ones tables under the vmap'd block init) can be
+    # deduplicated into one buffer, and donating an aliased buffer twice
+    # aborts Execute(). Production jobs restore params from checkpoints
+    # (distinct buffers) and can re-enable donation.
+    step_fn = jax.jit(ts.make_train_step(run, total_steps=steps))
+    controller = AmortizedController()
+    losses = []
+    t_loop = time.time()
+    for step in range(start_step, steps):
+        batch_np = dp.synthetic_tokens(data_cfg, step, shard=0)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if run.model.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(rng, step),
+                (shape.global_batch, shape.seq_len, cfg.d_model),
+                jnp.float32,
+            )
+        if run.model.family == "vlm":
+            batch["patches"] = jax.random.normal(
+                jax.random.fold_in(rng, step),
+                (shape.global_batch, cfg.num_prefix_tokens, cfg.d_model),
+                jnp.float32,
+            )
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        losses.append(loss)
+        if controller.observe(dt, 1):
+            # in a real job this triggers the knapsack re-slice of data
+            # shards (ft.reslice_*); single-host: just re-arm the credits
+            controller.balanced(lb_cost=dt, num_buckets=1, timeop=dt)
+        if step % log_every == 0:
+            print(
+                f"[train] step={step} loss={loss:.4f} "
+                f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                f"dt={dt*1e3:.0f}ms"
+            )
+        if acp and step > 0 and step % ckpt_every == 0:
+            acp.save(step, {"params": params, "opt": opt_state}, extra={"data_step": step})
+    if acp:
+        acp.save(steps, {"params": params, "opt": opt_state}, extra={"data_step": steps})
+        acp.wait()
+    return {
+        "final_loss": losses[-1],
+        "first_loss": losses[0],
+        "losses": losses,
+        "steps": len(losses),
+        "wall_s": time.time() - t_loop,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", help="smoke-size model")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = ShapeConfig("custom", args.seq, args.batch, "train")
+    run = RunConfig(model=cfg, shape=shape, learning_rate=args.lr, schedule=args.schedule)
+    out = train_loop(run, steps=args.steps, ckpt_dir=args.ckpt_dir)
+    print(
+        f"[train] done: loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+        f"in {out['steps']} steps ({out['wall_s']:.0f}s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention block
+applied every ``cfg.attn_every`` SSM layers (arXiv:2411.15242).
+
+The shared block has one set of parameters reused at every application
+site (Zamba's parameter-efficiency trick) but a distinct KV cache per
+site. Layer execution scans the SSM segments (homogeneous -> lax.scan)
+and interleaves the shared attention applications as an outer python loop
+(num_sites ~ L/attn_every ~= 13 for zamba2-7b: HLO stays small).
+
+Simplification vs the released checkpoint (noted in DESIGN.md): the
+shared block consumes the current hidden state only (Zamba2 concatenates
+the original embeddings; that doubles the shared block's input width
+without changing the systems behaviour we study).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import transformer as TF
+
+Params = dict[str, Any]
+
+
+def _num_sites(cfg) -> int:
+    return max(1, cfg.num_layers // cfg.attn_every)
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = L._dtype(cfg.dtype)
+    k_emb, k_blocks, k_shared = jax.random.split(rng, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: M2.block_init(k, cfg, dtype))(block_keys)
+    return {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "shared_attn": TF.block_init(k_shared, cfg, dtype),  # ONE shared block
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _segments(cfg) -> list[tuple[int, int]]:
+    """[(start_layer, end_layer)) SSM segments between attention sites."""
+    sites = _num_sites(cfg)
+    per = cfg.num_layers // sites
+    segs = []
+    s = 0
+    for i in range(sites):
+        e = cfg.num_layers if i == sites - 1 else s + per
+        segs.append((s, e))
+        s = e
+    return segs
+
+
+def forward(params: Params, tokens: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens].astype(L._dtype(cfg.dtype))
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def ssm_blk(p, h):
+        return h + M2.ssm_block_apply(p["ssm"], L.rmsnorm(h, p["ln"], cfg.norm_eps), cfg)
+
+    if cfg.remat:
+        ssm_blk = jax.checkpoint(ssm_blk)
+
+    from repro.distributed import sharding as shd
+
+    for (s, e) in _segments(cfg):
+        if cfg.scan_layers:
+            seg = jax.tree.map(lambda a: a[s:e], params["blocks"])
+            x, _ = jax.lax.scan(
+                lambda h, p: (ssm_blk(p, shd.constrain_activations(h)), None), x, seg
+            )
+        else:  # unrolled for roofline probes
+            for i in range(s, e):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                x = ssm_blk(p, shd.constrain_activations(x))
+        x, _ = TF.block_apply(params["shared_attn"], x, cfg, positions=positions)
+        x = shd.constrain_activations(x)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"], preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg), jnp.float32(0.0)
+
+
+def loss_fn(params: Params, batch: dict, cfg) -> tuple[jax.Array, dict]:
+    logits, _ = forward(params, batch["tokens"], cfg)
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg, batch_size: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    sites = _num_sites(cfg)
+    return {
+        "state": jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "k": jnp.zeros((sites, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((sites, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def decode_step(params: Params, cache: dict, token: jax.Array, pos: jax.Array, cfg):
+    x = params["embed"][token][:, None, :].astype(L._dtype(cfg.dtype))
+
+    # caches ride the carries with in-place updates (see transformer
+    # decode_step); the KV cache of the shared block is the large buffer
+    # at long_500k (sites x 524k keys), so copies matter.
+    states, kall, vall = cache["state"], cache["k"], cache["v"]
+    for i, (s, e) in enumerate(_segments(cfg)):
+        def ssm_body(j, carry, s=s):
+            h, sts = carry
+            p = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, s + j, 0, keepdims=False),
+                params["blocks"],
+            )
+            st = jax.lax.dynamic_index_in_dim(sts, s + j, 0, keepdims=False)
+            y, st2 = M2.ssm_block_decode(
+                p["ssm"], L.rmsnorm(h, p["ln"], cfg.norm_eps), st, cfg
+            )
+            sts = jax.lax.dynamic_update_index_in_dim(sts, st2, s + j, 0)
+            return (h + y, sts)
+
+        if cfg.scan_layers:
+            x, states = jax.lax.fori_loop(0, e - s, ssm_body, (x, states))
+        else:  # unrolled for roofline probes
+            carry = (x, states)
+            for j in range(e - s):
+                carry = ssm_body(j, carry)
+            x, states = carry
+        x, ck, cv = TF.block_decode(
+            params["shared_attn"], x, kall[i], vall[i], pos, cfg
+        )
+        kall = kall.at[i].set(ck)
+        vall = vall.at[i].set(cv)
+    cache = {"state": states, "k": kall, "v": vall}
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"], preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg), cache

@@ -1,0 +1,378 @@
+"""Neural net layers in pure JAX (no flax): params are nested dicts,
+layers are (init, apply) function pairs.
+
+Attention supports:
+  * full causal / bidirectional / prefix-LM masking
+  * GQA (num_kv_heads < num_heads)
+  * sliding-window masking (mixtral)
+  * blockwise "flash" execution with online softmax (O(S) memory) —
+    the default for long sequences; validated against the naive path.
+  * single-token decode against a KV cache.
+
+Compute dtype is bf16 with fp32 softmax/norm accumulation (TPU MXU native
+layout; matmul dims padded by the caller's configs to 128 multiples where
+it matters — see DESIGN.md roofline notes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int) -> jax.Array:
+    return jnp.ones((dim,), jnp.float32)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # the f32 upcast feeds ONLY the variance reduction; normalizing in the
+    # input dtype keeps all full-size tensors bf16 — otherwise XLA fuses
+    # the upcast into the layer-scan remat stash and stores it in f32
+    # (measured 2x stash: 6.8 GiB vs 3.4 GiB at coder-33b train_4k)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], D, H * hd, dtype),
+        "wk": dense_init(ks[1], D, KV * hd, dtype),
+        "wv": dense_init(ks[2], D, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, *, causal: bool, window: int,
+    prefix_len: jax.Array | int = 0,
+) -> jax.Array:
+    """(..., Sq, Sk) additive bias: 0 allowed / -inf masked.
+
+    prefix-LM: positions < prefix_len attend bidirectionally (paligemma).
+    """
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        cau = q_pos[..., :, None] >= k_pos[..., None, :]
+        if not isinstance(prefix_len, int) or prefix_len != 0:
+            bidir = k_pos[..., None, :] < prefix_len
+            cau = cau | bidir
+        ok = ok & cau
+    if window:
+        ok = ok & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """q: (B,Sq,H,hd) k/v: (B,Sk,KV,hd) bias: (B?,Sq,Sk) fp32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_blockwise(q, k, v, *, causal: bool, window: int, prefix_len, block_q: int, block_k: int):
+    """Flash-style blockwise attention with online softmax (O(S·block) memory).
+
+    Scan over KV blocks carrying (running max, denom, accum); outer scan
+    over Q blocks. Bias recomputed per block from positions — no S x S
+    materialization. Matches `_sdpa` to bf16 tolerance (tested).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    nq = (Sq + block_q - 1) // block_q
+    nk = (Sk + block_k - 1) // block_k
+    # pad to block multiples
+    q_pad = jnp.pad(q, ((0, 0), (0, nq * block_q - Sq), (0, 0), (0, 0)))
+    k_pad = jnp.pad(k, ((0, 0), (0, nk * block_k - Sk), (0, 0), (0, 0)))
+    v_pad = jnp.pad(v, ((0, 0), (0, nk * block_k - Sk), (0, 0), (0, 0)))
+    qb = q_pad.reshape(B, nq, block_q, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,KV,G,bq,hd)
+    kb = k_pad.reshape(B, nk, block_k, KV, hd).transpose(1, 0, 3, 2, 4)        # (nk,B,KV,bk,hd)
+    vb = v_pad.reshape(B, nk, block_k, KV, hd).transpose(1, 0, 3, 2, 4)
+    from repro.distributed import sharding as shd
+
+    qb, kb, vb = shd.constrain_blocked_attention(qb, kb, vb)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk  # index + (B,KV,G,bq,hd)
+        q_pos = qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kv_blk):
+            m, l, acc = carry
+            ki, kblk, vblk = kv_blk
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bkgqh,bksh->bkgqs", qblk, kblk, preferred_element_type=jnp.float32) * scale
+            ok = k_pos[None, :] < Sk  # padding mask
+            allow = jnp.ones((block_q, block_k), bool)
+            if causal:
+                cau = q_pos[:, None] >= k_pos[None, :]
+                if not (isinstance(prefix_len, int) and prefix_len == 0):
+                    cau = cau | (k_pos[None, :] < prefix_len)
+                allow = allow & cau
+            if window:
+                allow = allow & (q_pos[:, None] - k_pos[None, :] < window)
+            allow = allow & ok
+            s = jnp.where(allow, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(allow, p, 0.0)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksh->bkgqh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, hd), jnp.float32)
+        # remat each KV step: without it the scan saves the (bq, bk) prob
+        # tiles of EVERY block for backward — measured 9 GiB/device at
+        # train_4k. Recomputing the tile in the backward pass keeps the
+        # stash at the (m, l, acc) carry only.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return None, out
+
+    # two-level remat: checkpointing the whole q block keeps only qblk per
+    # block; the kv-scan residuals (the fp32 acc per kv block — measured
+    # 3.5 GiB at coder-33b train_4k) exist only transiently inside the
+    # recomputed backward of one q block.
+    _, ob = jax.lax.scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qb))
+    # ob: (nq, B, KV, G, bq, hd) -> (B, Sq, H, hd)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * block_q, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: jax.Array | int = 0,
+    use_rope: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+    blockwise: bool | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill). x: (B, S, D)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(B, S, KV, hd)
+        v = (x @ params["wv"]).reshape(B, S, KV, hd)
+        k_pos = positions
+    else:  # cross attention: kv from encoder memory
+        mem = kv_override[0]
+        k = (mem @ params["wk"]).reshape(B, mem.shape[1], KV, hd)
+        v = (mem @ params["wv"]).reshape(B, mem.shape[1], KV, hd)
+        k_pos = jnp.broadcast_to(jnp.arange(mem.shape[1], dtype=jnp.int32), (B, mem.shape[1]))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, k_pos, cfg.rope_theta)
+    if blockwise is None:
+        blockwise = S >= 4096 and kv_override is None
+    if blockwise:
+        out = _sdpa_blockwise(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            block_q=block_q, block_k=block_k,
+        )
+    else:
+        bias = _mask_bias(positions, k_pos, causal=causal, window=window, prefix_len=prefix_len)
+        out = _sdpa(q, k, v, bias)
+    return out.reshape(B, S, H * hd) @ params["wo"]
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,               # (B, 1, D) current token hidden
+    cache_k: jax.Array,         # (B, S_max, KV, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,             # (B,) int32 current position
+    cfg,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode. Returns (out (B,1,D), new_cache_k, new_cache_v).
+
+    With a sliding window the cache is a rolling buffer of size
+    min(S_max, window): writes wrap around (position mod window), which
+    caps the long_500k KV footprint for SWA archs (mixtral).
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    S_max = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k = (x @ params["wk"]).reshape(B, 1, KV, hd)
+    v = (x @ params["wv"]).reshape(B, 1, KV, hd)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % S_max if window else jnp.minimum(pos, S_max - 1)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    # scores over the whole cache; invalid slots masked by position
+    slots = jnp.arange(S_max)
+    if window:
+        # rolling buffer: slot s holds absolute position p iff p = pos - ((slot-s) mod S_max)
+        age = (slot[:, None] - slots[None, :]) % S_max   # (B, S_max)
+        abs_pos = pos[:, None] - age
+        valid = (abs_pos >= 0) & (age < S_max)
+    else:
+        abs_pos = jnp.broadcast_to(slots[None, :], (B, S_max))
+        valid = slots[None, :] <= pos[:, None]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, cache_v).reshape(B, 1, H * hd)
+    return out @ params["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, act: str = "silu") -> Params:
+    k1, k2 = jax.random.split(key)
+    if act == "silu":  # gated: fused gate+up
+        return {"wi": dense_init(k1, d_model, 2 * d_ff, dtype), "wo": dense_init(k2, d_ff, d_model, dtype)}
+    return {"wi": dense_init(k1, d_model, d_ff, dtype), "wo": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def mlp_apply(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = x @ params["wi"]
+    if act == "silu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wo"]
+
+
+def mask_padded_vocab(logits: jax.Array, cfg) -> jax.Array:
+    """-inf the vocab-padding slots (cfg.padded_vocab_size > vocab_size).
+
+    Padding keeps the vocab dim divisible by the TP axis so logits shard;
+    without it odd vocab sizes forced replicated fp32 logits (61.9
+    GiB/device at minicpm prefill_32k). The iota-compare fuses into the
+    logits einsum epilogue — no extra HBM traffic.
+    """
+    if cfg.padded_vocab_size == cfg.vocab_size:
+        return logits
+    vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    # large-finite (not -inf): the CE one-hot contraction would otherwise
+    # produce -inf * 0 = NaN at the padded slots
+    return jnp.where(vid < cfg.vocab_size, logits, jnp.float32(-1e9))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """Mean CE over valid positions; logits (B,S,V) fp32-accumulated.
+
+    The gold logit is picked with a fused one-hot contraction instead of
+    take_along_axis: under GSPMD a gather across the vocab-sharded dim
+    would all-gather the full fp32 logits (measured: 12+ GiB/device at
+    train_4k); the one-hot reduction keeps the vocab dim sharded and
+    reduces to (B, S) with a per-shard partial sum.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,263 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+"attention" (quadratic) form on the MXU; across chunks a sequential scan
+carries the (heads, head_dim, state) SSM state. Chunk length trades MXU
+utilization against scan length (cfg.ssm_chunk; roofline-tuned).
+
+Decode is the pure recurrence: h <- dA * h + dt * x (x) B ; y = C . h —
+O(1) per token, which is why mamba2-130m / zamba2-7b run the long_500k
+cell (see DESIGN.md).
+
+Reference oracle: ``ssd_reference`` (naive per-token recurrence) —
+chunked path is allclose-tested against it.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def ssm_init(key, cfg, dtype) -> Params:
+    """Input projections are stored *separately* (w_z/w_x/w_b/w_c/w_dt)
+    instead of one fused (D, 2di+2N+nh) matrix: the fused width (3352 for
+    mamba2-130m) is not divisible by the 16-way TP axis, so the fused
+    tensor could not be argument-sharded. Separate tensors shard cleanly
+    and XLA fuses the five matmuls back together."""
+    D = cfg.d_model
+    di = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    nh = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": L.dense_init(ks[0], D, di, dtype),
+        "w_x": L.dense_init(ks[1], D, di, dtype),
+        "w_b": L.dense_init(ks[2], D, N, dtype),
+        "w_c": L.dense_init(ks[3], D, N, dtype),
+        "w_dt": L.dense_init(ks[4], D, nh, dtype),
+        "w_out": L.dense_init(ks[5], di, D, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ln": L.rmsnorm_init(di),
+    }
+
+
+def _project(p: Params, u: jax.Array):
+    return u @ p["w_z"], u @ p["w_x"], u @ p["w_b"], u @ p["w_c"], u @ p["w_dt"]
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, S, nh, hp)
+    dt: jax.Array,   # (B, S, nh) post-softplus
+    A: jax.Array,    # (nh,) negative
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,nh,hp), h_final (B,nh,hp,N))."""
+    Bsz, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, "seq must be a multiple of ssm_chunk"
+    xc = x.reshape(Bsz, nc, chunk, nh, hp)
+    dtc = dt.reshape(Bsz, nc, chunk, nh)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hp, N), jnp.float32)
+
+    # One scan step handles one chunk END TO END (intra + inter + state).
+    # Materializing all chunks' (Q, Q, nh) decay tensors at once costs
+    # O(S/Q * Q^2 * nh) — terabytes at 32k seq; inside the scan the
+    # transient is a single chunk's (B, Q, Q, nh) tile. jax.checkpoint
+    # keeps backward from stashing the tile per chunk.
+    def step(h, inp):
+        xb, dtb, bb, cb = inp  # (B,Q,nh,hp) (B,Q,nh) (B,Q,N) (B,Q,N)
+        bb = bb.astype(jnp.float32)
+        cb = cb.astype(jnp.float32)
+        logd = dtb * A[None, None, :]                    # (B,Q,nh)
+        cum = jnp.cumsum(logd, axis=1)
+        CB = jnp.einsum("bqs,bks->bqk", cb, bb, preferred_element_type=jnp.float32)
+        gap = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Q,Q,nh)
+        gap = jnp.where(mask[None, :, :, None], gap, -jnp.inf)
+        Smat = CB[..., None] * jnp.exp(gap)              # (B,Q,Q,nh)
+        xdt = xb * dtb[..., None]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", Smat, xdt.astype(jnp.float32))
+        # inter-chunk: y_i += C_i . h_prev * exp(cum_i)
+        y_inter = jnp.einsum("bqs,bhps,bqh->bqhp", cb, h, jnp.exp(cum))
+        # state update: h' = exp(cumQ) h + sum_j exp(cumQ - cum_j) B_j xdt_j
+        last = cum[:, -1:, :]                            # (B,1,nh)
+        tail = jnp.exp(last - cum)                       # (B,Q,nh)
+        s_in = jnp.einsum("bks,bkh,bkhp->bhps", bb, tail, xdt.astype(jnp.float32))
+        h_new = h * jnp.exp(last[:, 0, :])[..., None, None] + s_in
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    scan_in = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+    )
+    h_fin, yb = jax.lax.scan(jax.checkpoint(step), h0, scan_in)
+    y = yb.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, nh, hp)
+    return y, h_fin
+
+
+def ssd_reference(x, dt, A, Bm, Cm) -> jax.Array:
+    """Naive per-token recurrence (oracle for tests)."""
+    Bsz, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,nh,hp) (B,nh) (B,N) (B,N)
+        dA = jnp.exp(dtt * A[None, :])                   # (B,nh)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhp,bs,bh->bhps", xt.astype(jnp.float32), bt, dtt
+        )
+        y = jnp.einsum("bhps,bs->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, hp, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def ssm_block_apply(p: Params, u: jax.Array, cfg) -> jax.Array:
+    """Full mamba2 block: in_proj -> SSD -> gated norm -> out_proj."""
+    Bsz, S, D = u.shape
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _project(p, u)
+    x = x.reshape(Bsz, S, nh, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    # B/C stay bf16 on the wire; the chunk step upcasts inside. Keeping
+    # the (B, S, *) scan inputs bf16 halves the per-layer stash (zamba2
+    # train_4k: 81 layers x 1.75 GiB fp32 residuals dominated the peak).
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, cfg.ssm_d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["ln"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def ssm_block_decode(
+    p: Params, u: jax.Array, state: jax.Array, cfg
+) -> tuple[jax.Array, jax.Array]:
+    """One-token decode. u (B,1,D), state (B,nh,hp,N)."""
+    Bsz = u.shape[0]
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _project(p, u[:, 0])
+    x = x.reshape(Bsz, nh, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                  # (B,nh)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bs,bh->bhps", x.astype(jnp.float32), Bm.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhps,bs->bhp", state, Cm.astype(jnp.float32))
+    y = y.astype(x.dtype) + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, cfg.ssm_d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["ln"], cfg.norm_eps)
+    return (y @ p["w_out"])[:, None, :], state
+
+
+# ---------------------------------------------------------------------------
+# full LM (attention-free stack)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, dtype) -> Params:
+    return {"ln": L.rmsnorm_init(cfg.d_model), "ssm": ssm_init(key, cfg, dtype)}
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = L._dtype(cfg.dtype)
+    k_emb, k_blocks = jax.random.split(rng)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, dtype))(block_keys)
+    return {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward(params: Params, tokens: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens].astype(L._dtype(cfg.dtype))
+
+    def blk(p, h):
+        return h + ssm_block_apply(p["ssm"], L.rmsnorm(h, p["ln"], cfg.norm_eps), cfg)
+
+    from repro.distributed import sharding as shd
+
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(
+            lambda h, p: (blk(p, shd.constrain_activations(h)), None), x, params["blocks"]
+        )
+    else:
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["blocks"])
+            x = blk(p, shd.constrain_activations(x))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    # embeddings are tied (standard for mamba2 checkpoints)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"], preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg), jnp.float32(0.0)
+
+
+def loss_fn(params: Params, batch: dict, cfg) -> tuple[jax.Array, dict]:
+    logits, _ = forward(params, batch["tokens"], cfg)
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg, batch_size: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    del max_seq, dtype  # SSM state is O(1) in sequence length
+    return {
+        "state": jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        )
+    }
+
+
+def decode_step(params: Params, cache: dict, token: jax.Array, pos: jax.Array, cfg):
+    del pos  # recurrence is position-free
+    x = params["embed"][token][:, None, :].astype(L._dtype(cfg.dtype))
+
+    # state rides the carry with in-place updates (see transformer.decode_step)
+    def body(i, carry):
+        h, states = carry
+        p = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["blocks"],
+        )
+        st = jax.lax.dynamic_index_in_dim(states, i, 0, keepdims=False)
+        y, st2 = ssm_block_decode(p["ssm"], L.rmsnorm(h, p["ln"], cfg.norm_eps), st, cfg)
+        states = jax.lax.dynamic_update_index_in_dim(states, st2, i, 0)
+        return (h + y, states)
+
+    if cfg.scan_layers:
+        x, states = jax.lax.fori_loop(0, cfg.num_layers, body, (x, cache["state"]))
+    else:  # unrolled for roofline probes
+        carry = (x, cache["state"])
+        for i in range(cfg.num_layers):
+            carry = body(i, carry)
+        x, states = carry
+    cache = {"state": states}
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], params["embed"], preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg), cache

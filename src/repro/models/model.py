@@ -1,0 +1,109 @@
+"""Model registry: family -> implementation module, plus input specs for
+the dry-run and synthetic batches for smoke tests."""
+from __future__ import annotations
+
+import types
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, mamba2, transformer, vlm
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def get_model(cfg: ModelConfig):
+    """Resolve the implementation module for a config's family."""
+    return _FAMILY[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract input shapes for one (arch x shape) cell.
+
+    train/prefill: full-sequence batch. decode: one new token + KV cache
+    of seq_len (the harness decode contract).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {
+            "tokens": sd((B, S), i32),
+            "labels": sd((B, S), i32),
+            "mask": sd((B, S), f32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = sd((B, S, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["patches"] = sd((B, cfg.num_prefix_tokens, cfg.d_model), f32)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+            batch.pop("mask")
+        return batch
+    # decode: one token against a seq_len cache
+    mdl = get_model(cfg)
+    cache = jax.eval_shape(lambda: mdl.init_cache(cfg, B, S))
+    return {
+        "token": sd((B,), i32),
+        "pos": sd((B,), i32),
+        "cache": cache,
+    }
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, rng: jax.Array) -> dict:
+    """Concrete random batch for smoke tests / the quickstart example."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(k3, (batch, seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k3, (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def prefill_fn(cfg: ModelConfig):
+    """Inference forward (logits only) for prefill cells."""
+    mdl = get_model(cfg)
+
+    def fn(params, batch):
+        if cfg.family == "encdec":
+            memory = encdec.encode(params, batch["frames"], cfg)
+            return encdec.decode_train(params, batch["tokens"], memory, cfg)
+        if cfg.family == "vlm":
+            logits, _ = vlm.forward(params, batch["tokens"], batch["patches"], cfg)
+            return logits
+        logits, _ = mdl.forward(params, batch["tokens"], cfg)
+        return logits
+
+    return fn
+
+
+def serve_step_fn(cfg: ModelConfig):
+    """One-token decode step (the harness serve_step)."""
+    mdl = get_model(cfg)
+
+    def fn(params, batch):
+        logits, cache = mdl.decode_step(params, batch["cache"], batch["token"], batch["pos"], cfg)
+        return {"logits": logits, "cache": cache}
+
+    return fn

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer with partitioner-based dispatch.
+
+This is the paper's technique as a *first-class feature* of the LM stack:
+token -> expert dispatch is a partition problem. Tokens are laid on a
+1-D curve (sorted by expert assignment — the analogue of SFC order),
+positions within each expert come from a parallel prefix (the paper's
+"global rank on a weighted line segment"), and capacity slicing is the
+greedy knapsack. Overflow beyond capacity is dropped exactly like
+bounded-MAX_MSG_SIZE migration rounds; the auxiliary load-balancing loss
+plays the paper's incremental-LB role, and ``expert_load`` feeds the
+``AmortizedController`` that decides when to re-place experts across EP
+shards (see runtime/elastic.py).
+
+Expert weights are stacked (E, D, F): sharding rules put E on the
+"model" axis (expert parallelism) for many-expert archs (qwen3: 128e),
+or shard F within experts (TP) for few-expert archs (mixtral: 8e).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(D)
+    scale_out = 1.0 / jnp.sqrt(F)
+    # gate/up stored separately: a fused (E, D, 2F) tensor needs a
+    # jnp.split whose halves lose the TP sharding under GSPMD (measured
+    # 10 GiB fp32 all-gathers per half at mixtral train_4k)
+    return {
+        "router": L.dense_init(k1, D, E, jnp.float32),
+        "wg": (jax.random.normal(k2, (E, D, F), jnp.float32) * scale_in).astype(dtype),
+        "wu": (jax.random.normal(k4, (E, D, F), jnp.float32) * scale_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (E, F, D), jnp.float32) * scale_out).astype(dtype),
+    }
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg, *, capacity_factor: float = 1.25
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux load-balance loss.
+
+    *Grouped* sort-based dispatch (knapsack curve per group): each batch
+    row is a dispatch group, so every sort/scatter is local to the row
+    and the whole computation stays sharded over the batch axis — no
+    global T x K x D gather (an earlier global variant measured 235
+    GiB/device at qwen3 train_4k; see EXPERIMENTS.md §Perf).
+
+      1. top-k routing -> (B, S*K) expert choices with combine weights
+      2. per-row stable sort by expert id = "curve order"
+      3. position-in-expert via prefix ranks (rank on the weighted curve)
+      4. capacity-sliced scatter into (B, E, Cr, D); batched expert
+         einsum; combine back. Overflow drops (bounded MAX_MSG_SIZE).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    TK = S * K
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"]
+    )  # (B, S, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, K)  # (B, S, K)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(1.0) / (B * TK)
+    aux = E * jnp.sum(me * ce)
+
+    # --- per-row curve ordering + prefix ranks ----------------------------
+    flat_e = tope.reshape(B, TK)                                  # (B, S*K)
+    flat_w = topw.reshape(B, TK)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None, :], (B, TK)
+    )
+    order = jnp.argsort(flat_e, axis=1, stable=True)              # curve order
+    e_s = jnp.take_along_axis(flat_e, order, axis=1)
+    w_s = jnp.take_along_axis(flat_w, order, axis=1)
+    t_s = jnp.take_along_axis(flat_t, order, axis=1)
+    # rank within expert: index - start_of_expert (vectorized searchsorted)
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E, dtype=es.dtype)))(e_s)
+    pos_in_e = jnp.arange(TK, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        starts, e_s, axis=1
+    )
+
+    from repro.distributed import sharding as shd
+
+    C = int(max(1, capacity_factor * TK / E))
+    keep = pos_in_e < C
+
+    # Dispatch is vmapped over the batch row: the per-row gather/scatter
+    # then lowers with explicit batching dims, which GSPMD partitions
+    # along the batch axis. (A flat formulation with compound 3-D scatter
+    # indices defeated the SPMD partitioner and replicated the operand —
+    # measured 80 GiB operand-shaped u32 maps at qwen3 train_4k.)
+    def _dispatch_row(x_row, t_row, e_row, p_row):
+        xg = x_row.at[t_row].get(mode="promise_in_bounds")        # (TK, D)
+        buf = jnp.zeros((E, C, D), x.dtype)
+        # overflow rides pos >= C and is dropped (bounded MAX_MSG_SIZE);
+        # do NOT clip-and-zero: a clipped .set would stomp slot 0.
+        return buf.at[e_row, p_row].set(xg, mode="drop")
+
+    buf = jax.vmap(_dispatch_row)(x, t_s, e_s, pos_in_e)          # (B, E, C, D)
+    buf = shd.constrain_moe(buf, "buf", E)
+
+    # --- expert computation (groups batched; experts stacked) -------------
+    gate = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    up = jnp.einsum("becd,edf->becf", buf, p["wu"])
+    gate = shd.constrain_moe(gate, "h", E)
+    up = shd.constrain_moe(up, "h", E)
+    h = shd.constrain_moe(jax.nn.silu(gate) * up, "h", E)
+    out_e = jnp.einsum("becf,efd->becd", h, p["wo"])              # (B, E, C, D)
+    out_e = shd.constrain_moe(out_e, "buf", E)
+
+    # --- combine back (vmapped like the dispatch) ---------------------------
+    pos_c = jnp.minimum(pos_in_e, C - 1)
+
+    def _combine_row(oe_row, e_row, p_row, t_row, w_row, keep_row):
+        g = oe_row.at[e_row, p_row].get(mode="promise_in_bounds")  # (TK, D)
+        g = jnp.where(keep_row[:, None], g, 0.0)                   # drop overflow
+        contrib = g * w_row[:, None].astype(g.dtype)
+        y_row = jnp.zeros((S, D), contrib.dtype)
+        return y_row.at[t_row].add(contrib, mode="promise_in_bounds")
+
+    y = jax.vmap(_combine_row)(out_e, e_s, pos_c, t_s, w_s, keep)
+    return y, aux
+
+
+def expert_load(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Token count per expert for this batch — the weight vector the
+    AmortizedController watches to trigger expert re-placement."""
+    B, S, D = x.shape
+    logits = x.reshape(-1, D).astype(jnp.float32) @ p["router"]
+    _, tope = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.num_experts_per_tok)
+    return jnp.zeros((cfg.num_experts,), jnp.int32).at[tope.reshape(-1)].add(1)
+
+
+def rebalance_expert_placement(load: jax.Array, num_shards: int):
+    """Knapsack re-placement of experts onto EP shards (paper §III-C
+    applied to expert weights): experts in id order form the curve,
+    loads are the weights, the slice gives shard assignments.
+
+    Returns (assignment (E,), migration plan vs round-robin baseline).
+    """
+    from repro.core import knapsack, migration
+    import numpy as np
+
+    E = load.shape[0]
+    part = knapsack.slice_weighted_curve(jnp.asarray(load, jnp.float32), num_shards)
+    baseline = np.arange(E) % num_shards  # default round-robin placement
+    plan = migration.migration_plan(baseline, np.asarray(part), num_shards)
+    return part, plan

@@ -1,0 +1,208 @@
+"""Decoder-only transformer LM (llama-family: deepseek-coder-33b,
+smollm-135m, deepseek-7b, minicpm-2b; also the backbone for mixtral /
+qwen3-moe / paligemma).
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` so
+HLO size is O(1) in depth — essential for 62-layer configs compiled for a
+512-chip mesh. ``cfg.remat`` wraps the block in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# one transformer block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg, dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        from repro.models import moe as M
+
+        p["moe"] = M.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, cfg.act)
+    return p
+
+
+def block_apply(
+    p: Params, x: jax.Array, cfg, *, positions, prefix_len=0, blockwise=None
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss). aux_loss is 0 for dense blocks."""
+    h = L.attention_apply(
+        p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+        positions=positions, causal=True, window=cfg.window,
+        prefix_len=prefix_len, blockwise=blockwise,
+    )
+    x = x + h
+    hin = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        from repro.models import moe as M
+
+        h2, aux = M.moe_apply(p["moe"], hin, cfg)
+    else:
+        h2 = L.mlp_apply(p["mlp"], hin, cfg.act)
+        aux = jnp.float32(0.0)
+    return x + h2, aux
+
+
+def block_decode(
+    p: Params, x: jax.Array, ck: jax.Array, cv: jax.Array, pos: jax.Array, cfg
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    h, ck, cv = L.attention_decode(
+        p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), ck, cv, pos, cfg,
+        window=cfg.window,
+    )
+    x = x + h
+    hin = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        from repro.models import moe as M
+
+        h2, _ = M.moe_apply(p["moe"], hin, cfg)
+    else:
+        h2 = L.mlp_apply(p["mlp"], hin, cfg.act)
+    return x + h2, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng) -> Params:
+    dtype = L._dtype(cfg.dtype)
+    k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.padded_vocab_size, dtype)
+    return params
+
+
+def _scan_blocks(params, x, cfg, positions, prefix_len=0):
+    """Run all blocks; scan if cfg.scan_layers else unrolled python loop."""
+    base = functools.partial(
+        block_apply, cfg=cfg, positions=positions, prefix_len=prefix_len
+    )
+    if cfg.remat:
+        blk = jax.checkpoint(lambda p, h, _b=base: _b(p, h))
+    else:
+        blk = lambda p, h, _b=base: _b(p, h)  # noqa: E731
+
+    from repro.distributed import sharding as shd
+
+    if cfg.scan_layers:
+        def step(h, p):
+            h = shd.constrain_activations(h)
+            h2, aux = blk(p, h)
+            return h2, aux
+
+        x, auxs = jax.lax.scan(step, x, params["blocks"])
+        return shd.constrain_activations(x), jnp.sum(auxs)
+    aux_total = jnp.float32(0.0)
+    for i in range(cfg.num_layers):
+        p = jax.tree.map(lambda a: a[i], params["blocks"])
+        x, aux = blk(p, shd.constrain_activations(x))
+        aux_total = aux_total + aux
+    return shd.constrain_activations(x), aux_total
+
+
+def forward(
+    params: Params, tokens: jax.Array, cfg, *, prefix_embeds: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> logits (B, S_total, V). prefix_embeds (B, P, D)
+    prepends modality embeddings (vlm stub). Returns (logits, aux_loss)."""
+    x = params["embed"][tokens].astype(L._dtype(cfg.dtype))
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux = _scan_blocks(params, x, cfg, positions, prefix_len=prefix_len)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg), aux
+
+
+def loss_fn(params: Params, batch: dict, cfg) -> tuple[jax.Array, dict]:
+    prefix = batch.get("patches")
+    logits, aux = forward(params, batch["tokens"], cfg, prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    S = min(max_seq, cfg.window) if cfg.window else max_seq
+    shape = (cfg.num_layers, batch_size, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(
+    params: Params, cache: dict, token: jax.Array, pos: jax.Array, cfg
+) -> tuple[jax.Array, dict]:
+    """One-token decode. token (B,), pos (B,) -> (logits (B, V), cache).
+
+    The cache rides the loop CARRY with dynamic in-place slice updates
+    rather than scan xs->ys: scan ys are always freshly allocated, which
+    tripled the live KV bytes (measured 34 GiB vs an 8 GiB cache at
+    deepseek-7b decode_32k). fori_loop + dynamic_update_index is aliased
+    in place by XLA, and the jit-level donation covers input->output.
+    """
+    x = params["embed"][token][:, None, :].astype(L._dtype(cfg.dtype))
+
+    def body(i, carry):
+        h, ck_all, cv_all = carry
+        p = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["blocks"],
+        )
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        h2, ck2, cv2 = block_decode(p, h, ck, cv, pos, cfg)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck2, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv2, i, 0)
+        return (h2, ck_all, cv_all)
+
+    if cfg.scan_layers:
+        x, ck, cv = jax.lax.fori_loop(
+            0, cfg.num_layers, body, (x, cache["k"], cache["v"])
+        )
+    else:  # unrolled: used by the roofline probes (loop bodies are counted
+        #    once by XLA cost analysis, so probes must not loop)
+        ck, cv = cache["k"], cache["v"]
+        carry = (x, ck, cv)
+        for i in range(cfg.num_layers):
+            carry = body(i, carry)
+        x, ck, cv = carry
+    cache = {"k": ck, "v": cv}
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    return L.mask_padded_vocab(logits, cfg)[:, 0], cache

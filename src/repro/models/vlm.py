@@ -1,0 +1,53 @@
+"""PaliGemma-style VLM backbone (arXiv:2407.07726).
+
+The SigLIP vision tower is a STUB per the harness instruction: the model
+consumes precomputed patch embeddings (B, N_img, d_model) from
+``input_specs``. The language backbone is the gemma-style decoder from
+``transformer.py`` with prefix-LM masking: image-prefix positions attend
+bidirectionally, text positions causally — implemented via the
+``prefix_len`` argument of the attention mask.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as TF
+
+Params = dict[str, Any]
+
+
+def init_params(cfg, rng) -> Params:
+    return TF.init_params(cfg, rng)
+
+
+def forward(params: Params, tokens: jax.Array, patches: jax.Array, cfg):
+    """tokens (B, S_text), patches (B, N_img, D) -> logits over text slots."""
+    logits, aux = TF.forward(params, tokens, cfg, prefix_embeds=patches)
+    return logits[:, patches.shape[1]:], aux
+
+
+def loss_fn(params: Params, batch: dict, cfg) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, batch["tokens"], batch["patches"], cfg)
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg, batch_size: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    return TF.init_cache(cfg, batch_size, max_seq, dtype)
+
+
+def prefill_prefix(params: Params, patches: jax.Array, cache: dict, cfg) -> dict:
+    """Run the image prefix through the decoder once, filling the cache.
+
+    (Serving path; the dry-run decode cell assumes the cache is already
+    filled to seq_len and lowers only the steady-state token step.)
+    """
+    raise NotImplementedError("use decode_step after cache prefill in serve engine")
+
+
+def decode_step(params: Params, cache: dict, token: jax.Array, pos: jax.Array, cfg):
+    return TF.decode_step(params, cache, token, pos, cfg)

@@ -1,0 +1,94 @@
+"""AdamW in pure JAX: bf16 params + fp32 master copies/moments,
+global-norm clipping, decoupled weight decay.
+
+State layout (a pytree mirroring params):
+  {"master": fp32 params, "m": fp32, "v": fp32, "step": int32 scalar}
+The bf16 working params are derived from the master copy each step, so
+FSDP sharding rules apply uniformly to params and state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def init(params: Pytree) -> Pytree:
+    f32 = lambda p: p.astype(jnp.float32)  # noqa: E731
+    # m and v come from the SAME tree.map structure but must be distinct
+    # buffers: identical zeros constants can be deduplicated by the
+    # runtime, and donating an aliased buffer twice aborts Execute().
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    zeros2 = lambda p: jnp.tile(jnp.zeros((), jnp.float32), p.shape)  # noqa: E731
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros2, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_matrix(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def update(
+    grads: Pytree,
+    state: Pytree,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    param_dtype=jnp.bfloat16,
+) -> tuple[Pytree, Pytree]:
+    """One AdamW step. Returns (new bf16 params, new state).
+
+    Weight decay applies only to >=2-D tensors (norms/biases exempt,
+    standard practice).
+    """
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and _is_matrix(master):
+            delta = delta + weight_decay * master
+        master = master - lr * delta
+        return master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = treedef.flatten_up_to(state["master"])
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    master = treedef.unflatten([t[0] for t in new])
+    m = treedef.unflatten([t[1] for t in new])
+    v = treedef.unflatten([t[2] for t in new])
+    params = jax.tree.map(
+        lambda p, proto: p.astype(proto.dtype if hasattr(proto, "dtype") else param_dtype),
+        master,
+        grads,
+    )
+    return params, {"master": master, "m": m, "v": v, "step": step}

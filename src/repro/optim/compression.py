@@ -1,0 +1,77 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses the data-center network, which
+is an order of magnitude slower than ICI. Two standard compressors with
+error feedback (the residual of the compression is carried to the next
+step so the expectation is unbiased over time):
+
+* ``topk``: keep the largest-|g| fraction per tensor (sparse, 32x+ at 3%)
+* ``int8``: per-tensor symmetric quantization (4x vs fp32, 2x vs bf16)
+
+The compressors are pure functions usable inside jit; the training step
+applies them to the *cross-pod* partial sum only (the in-pod ICI
+reduce-scatter stays exact), matching hierarchical gradient reduction.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def topk_compress(g: jax.Array, frac: float) -> tuple[jax.Array, jax.Array]:
+    """Zero all but the top-|frac| entries. Returns (compressed, residual)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(frac * flat.shape[0]))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    resid = flat - kept
+    return kept.reshape(g.shape), resid.reshape(g.shape)
+
+
+def int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Symmetric int8 quantization. Returns (q, scale, residual)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def ef_apply(
+    grads: Pytree, residuals: Pytree | None, *, mode: str = "int8", topk_frac: float = 0.03
+) -> tuple[Pytree, Pytree, dict]:
+    """Error-feedback compression over a gradient pytree.
+
+    grads_in + residual -> compress -> (compressed grads to reduce,
+    new residual). ``mode``: "int8" | "topk" | "none".
+    """
+    if mode == "none":
+        return grads, residuals, {"compression_ratio": 1.0}
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    comp_bits = {"int8": 8, "topk": 32}[mode]
+    ratios = []
+
+    def one(g, r):
+        gin = g.astype(jnp.float32) + r
+        if mode == "topk":
+            kept, resid = topk_compress(gin, topk_frac)
+            ratios.append(topk_frac)
+            return kept.astype(g.dtype), resid
+        q, scale, resid = int8_compress(gin)
+        ratios.append(comp_bits / 32.0)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), resid
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    return new_g, new_r, {"compression_ratio": sum(ratios) / max(len(ratios), 1)}

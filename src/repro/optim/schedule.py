@@ -1,0 +1,32 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, minicpm
+arXiv:2404.06395 — warmup, long stable plateau, sharp exponential decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor: float = 0.01):
+    """Warmup -> Stable plateau -> exponential Decay over the last
+    ``decay_frac`` of training (the minicpm schedule)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(decay_frac * total, 1.0)
+    decay_start = total - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    stable = jnp.asarray(peak_lr, jnp.float32)
+    t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    decay = peak_lr * jnp.power(floor, t)  # exponential to floor*peak
+    out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, stable, decay))
+    return out
+
+
+def get(name: str):
+    return {"cosine": cosine, "wsd": wsd}[name]

@@ -1,0 +1,43 @@
+"""Elastic scaling: reshape the device mesh and re-place sharded state.
+
+On mesh change (node loss / pool growth), parameters are restored from
+the mesh-agnostic checkpoint onto the new mesh (checkpoint.restore with
+new shardings). Expert placement and data shards are re-sliced with the
+paper's knapsack; the expected migration volume is computed from the
+migration plan so the launcher can decide between in-place reshard
+(cheap, neighbors only) and full restart.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import knapsack, migration
+import jax.numpy as jnp
+
+
+def viable_mesh_shapes(n_devices: int, *, min_model: int = 1) -> list[tuple[int, int]]:
+    """(data, model) factorizations of the surviving device count,
+    preferring square-ish meshes (ICI locality)."""
+    shapes = []
+    for m in range(min_model, n_devices + 1):
+        if n_devices % m == 0:
+            shapes.append((n_devices // m, m))
+    shapes.sort(key=lambda dm: abs(np.log(dm[0] / dm[1])))
+    return shapes
+
+
+def replacement_plan(
+    old_parts: np.ndarray, weights: np.ndarray, new_num_parts: int
+) -> tuple[np.ndarray, migration.MigrationPlan]:
+    """Knapsack re-slice of weighted units onto a new part count."""
+    new = np.asarray(
+        knapsack.slice_weighted_curve(jnp.asarray(weights, jnp.float32), new_num_parts)
+    )
+    P = max(int(old_parts.max()) + 1, new_num_parts)
+    plan = migration.migration_plan(old_parts, new, P)
+    return new, plan
+
+
+def estimate_reshard_bytes(plan: migration.MigrationPlan, bytes_per_unit: int) -> int:
+    return plan.total_moved * bytes_per_unit

@@ -1,0 +1,106 @@
+"""Dynamic trees (Alg. 1) + amortized load balancing (Alg. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dynamic
+
+
+def _mk(rng, n=3000, depth=14, b=32):
+    pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+    return dynamic.from_points(pts, max_depth=depth, bucket_size=b)
+
+
+def _conserved(dps) -> bool:
+    M = dps.tree.num_nodes
+    holds = jax.ops.segment_sum(dps.active.astype(jnp.int32), dps.leaf_id, num_segments=M)
+    return int(holds.sum()) == int(dps.active.sum()) and int(dps.tree.count[0]) == int(
+        dps.active.sum()
+    )
+
+
+def test_insert_locates_and_counts(rng):
+    dps = _mk(rng)
+    new = jnp.asarray(rng.random((500, 3)), jnp.float32)
+    dps2 = dynamic.insert(dps, new, jnp.ones(500, jnp.float32))
+    assert int(dps2.active.sum()) == 3500
+    assert int(dps2.tree.count[0]) == 3500  # root count bumped along paths
+
+
+def test_delete_decrements(rng):
+    dps = _mk(rng)
+    dps2 = dynamic.delete(dps, jnp.arange(100))
+    assert int(dps2.active.sum()) == 2900
+    assert int(dps2.tree.count[0]) == 2900
+
+
+def test_split_heavy_buckets(rng):
+    # depth 20: midpoint splitters spend ~4 levels shaving empty halves
+    # before reaching the 0.01-wide cluster (the paper's midpoint-vs-median
+    # observation), so give SplitLeaf room to finish.
+    dps = _mk(rng, depth=20)
+    burst = jnp.asarray(0.3 + 0.01 * rng.random((2000, 3)), jnp.float32)
+    dps = dynamic.insert(dps, burst, jnp.ones(2000, jnp.float32))
+    assert int(dynamic.max_bucket_occupancy(dps)) > 2 * 32
+    dps = dynamic.adjustments(dps)
+    assert int(dynamic.max_bucket_occupancy(dps)) <= 2 * 32
+    assert _conserved(dps)
+
+
+def test_merge_light_buckets(rng):
+    dps = _mk(rng)
+    ids = np.nonzero(np.asarray(dps.active))[0]
+    rng.shuffle(ids)
+    dps = dynamic.delete(dps, jnp.asarray(ids[:2700]))
+    nb0 = int(dynamic.num_buckets(dps))
+    dps = dynamic.adjustments(dps)
+    nb1 = int(dynamic.num_buckets(dps))
+    assert nb1 < nb0, f"merge should reduce buckets: {nb0} -> {nb1}"
+    assert _conserved(dps)
+
+
+@given(seed=st.integers(0, 1000), frac=st.floats(0.1, 0.9))
+@settings(max_examples=8, deadline=None)
+def test_property_adjustments_conserve(seed, frac):
+    rng = np.random.default_rng(seed)
+    dps = _mk(rng, n=1200, depth=12)
+    new = jnp.asarray(rng.random((400, 3)).astype(np.float32) * 0.2)
+    dps = dynamic.insert(dps, new, jnp.ones(400, jnp.float32))
+    ids = np.nonzero(np.asarray(dps.active))[0]
+    kill = ids[: int(len(ids) * frac)]
+    dps = dynamic.delete(dps, jnp.asarray(kill))
+    dps = dynamic.adjustments(dps)
+    assert _conserved(dps)
+
+
+def test_amortized_controller_alg3():
+    """Credits = LB cost; rebalance triggers when cumulative excess
+    exceeds credits (Algorithm 3 semantics)."""
+    c = dynamic.AmortizedController()
+    c.balanced(lb_cost=5.0, num_buckets=100, timeop=0.01)
+    # constant cost: never triggers
+    assert not any(c.observe(0.01, 100) for _ in range(50))
+    # drifting cost accumulates delta = sum(cost - base)
+    c2 = dynamic.AmortizedController()
+    c2.balanced(lb_cost=5.0, num_buckets=100, timeop=0.01)
+    fired = [c2.observe(0.01 + 0.001 * i, 100) for i in range(40)]
+    assert True in fired
+    i = fired.index(True)
+    # delta at trigger must exceed credits
+    assert c2.delta > 5.0
+    assert i > 5  # amortization delays the trigger
+
+
+def test_controller_more_credits_fewer_rebalances():
+    def run(lb_cost):
+        c = dynamic.AmortizedController()
+        c.balanced(lb_cost=lb_cost, num_buckets=100, timeop=0.01)
+        n = 0
+        for i in range(200):
+            if c.observe(0.011 + 0.0005 * (i % 37), 100):
+                c.balanced(lb_cost=lb_cost, num_buckets=100, timeop=0.01)
+                n += 1
+        return n
+
+    assert run(20.0) <= run(2.0)

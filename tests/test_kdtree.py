@@ -1,0 +1,79 @@
+"""kd-tree construction invariants across all four splitters (paper §III-A)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kdtree
+
+SPLITTERS = ["midpoint", "median", "median_sampled", "median_selection"]
+
+
+@pytest.mark.parametrize("splitter", SPLITTERS)
+def test_build_invariants_uniform(splitter, rng):
+    pts = jnp.asarray(rng.random((4000, 3)), jnp.float32)
+    tr = kdtree.build(pts, max_depth=10, bucket_size=32, splitter=splitter)
+    rep = kdtree.validate(tr, pts)
+    assert rep["ok"], rep["problems"]
+    assert int(tr.count[0]) == 4000  # root holds everything
+
+
+@pytest.mark.parametrize("splitter", ["midpoint", "median"])
+def test_build_invariants_clustered(splitter, rng):
+    clu = np.concatenate(
+        [rng.normal(0.1, 0.01, (3000, 3)), rng.random((1000, 3))]
+    ).astype(np.float32)
+    tr = kdtree.build(jnp.asarray(clu), max_depth=12, bucket_size=32, splitter=splitter)
+    rep = kdtree.validate(tr, jnp.asarray(clu))
+    assert rep["ok"], rep["problems"]
+
+
+def test_median_shorter_trees_on_clusters(rng):
+    """Paper: 'For clustered distributions, median splitters produced
+    shorter trees'."""
+    clu = np.concatenate(
+        [rng.normal(0.05, 0.005, (7000, 3)), rng.random((1000, 3))]
+    ).astype(np.float32)
+    depths = {}
+    for splitter in ("midpoint", "median"):
+        tr = kdtree.build(jnp.asarray(clu), max_depth=14, bucket_size=32, splitter=splitter)
+        d = np.floor(np.log2(np.asarray(tr.leaf_id) + 1)).astype(int)
+        depths[splitter] = d.mean()
+    assert depths["median"] < depths["midpoint"]
+
+
+def test_weighted_counts(rng):
+    pts = jnp.asarray(rng.random((1000, 2)), jnp.float32)
+    w = jnp.asarray(rng.random(1000).astype(np.float32))
+    tr = kdtree.build(pts, w, max_depth=8, bucket_size=16)
+    assert np.isclose(float(tr.weight[0]), float(w.sum()), rtol=1e-5)
+
+
+def test_hybrid_splitter_policy(rng):
+    pts = jnp.asarray(rng.random((2000, 3)), jnp.float32)
+    tr = kdtree.build(
+        pts, max_depth=10, bucket_size=32, splitter="median", median_top_levels=3
+    )
+    assert kdtree.validate(tr, pts)["ok"]
+
+
+@given(
+    n=st.integers(64, 1500),
+    d=st.integers(1, 5),
+    b=st.sampled_from([8, 32, 100]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=12, deadline=None)
+def test_property_membership_and_occupancy(n, d, b, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.random((n, d)), jnp.float32)
+    tr = kdtree.build(pts, max_depth=10, bucket_size=b, splitter="midpoint")
+    rep = kdtree.validate(tr, pts)
+    assert rep["ok"], rep["problems"]
+
+
+def test_tree_order_is_permutation(rng):
+    pts = jnp.asarray(rng.random((3000, 3)), jnp.float32)
+    tr = kdtree.build(pts, max_depth=10, bucket_size=32)
+    perm, _ = kdtree.tree_order(tr, pts)
+    assert len(np.unique(np.asarray(perm))) == 3000

@@ -1,0 +1,69 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the harness kernel-validation contract)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sfc
+from repro.kernels import bucket_search as bsk
+from repro.kernels import hilbert as hk
+from repro.kernels import knapsack_scan as kk
+from repro.kernels import morton as mk
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize(
+    "n,d,bits",
+    [
+        (100, 2, 16), (5000, 2, 16), (2048, 2, 8),
+        (100, 3, 10), (5000, 3, 10), (4096, 3, 5),
+        (333, 5, 6), (2047, 7, 4), (1000, 10, 3),
+    ],
+)
+def test_morton_kernel_sweep(n, d, bits, rng):
+    pts = jnp.asarray(rng.random((n, d)), jnp.float32)
+    cells = sfc.quantize(pts, bits)
+    out = mk.morton_from_cells(cells, bits)
+    expect = ref.morton_from_cells(cells, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize(
+    "n,d,bits",
+    [
+        (100, 2, 16), (3000, 2, 12), (100, 3, 10),
+        (3000, 3, 10), (511, 4, 8), (777, 6, 5), (1000, 10, 3),
+    ],
+)
+def test_hilbert_kernel_sweep(n, d, bits, rng):
+    pts = jnp.asarray(rng.random((n, d)), jnp.float32)
+    cells = sfc.quantize(pts, bits)
+    out = hk.hilbert_from_cells(cells, bits)
+    expect = ref.hilbert_from_cells(cells, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("n", [64, 4096, 5000, 16384])
+@pytest.mark.parametrize("p", [2, 16, 63])
+def test_knapsack_kernel_sweep(n, p, rng):
+    w = jnp.asarray((rng.random(n) + 0.05).astype(np.float32))
+    out = kk.knapsack_parts(w, p)
+    expect = ref.knapsack_parts(w, p)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("q,b", [(100, 17), (4096, 128), (2048, 1024), (100, 1)])
+def test_bucket_search_kernel_sweep(q, b, rng):
+    bk = jnp.sort(jnp.asarray(rng.integers(0, 2**31, b).astype(np.uint32)))
+    qk = jnp.asarray(rng.integers(0, 2**31, q).astype(np.uint32))
+    out = bsk.bucket_search(qk, bk)
+    expect = ref.bucket_search(qk, bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_bucket_search_exact_boundaries():
+    bk = jnp.asarray([10, 20, 30], jnp.uint32)
+    qk = jnp.asarray([5, 10, 15, 20, 29, 30, 31], jnp.uint32)
+    out = np.asarray(bsk.bucket_search(qk, bk))
+    expect = np.asarray(ref.bucket_search(qk, bk))
+    np.testing.assert_array_equal(out, expect)

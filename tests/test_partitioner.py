@@ -1,0 +1,77 @@
+"""End-to-end partitioner: quality metrics + distributed path (multi-device
+subprocess covered in test_distributed.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics, partitioner
+
+
+def test_partition_balances_weighted_points(rng):
+    pts = jnp.asarray(rng.random((8192, 3)), jnp.float32)
+    w = jnp.asarray((rng.random(8192) + 0.5).astype(np.float32))
+    res = partitioner.partition(pts, w, num_parts=12)
+    loads = np.asarray(res.loads)
+    assert loads.max() - loads.min() <= 2 * float(w.max()) + 1e-3
+    # part is a valid assignment of every original element
+    assert np.asarray(res.part).min() >= 0 and np.asarray(res.part).max() == 11
+
+
+@pytest.mark.parametrize("curve", ["morton", "hilbert"])
+def test_partitions_are_spatially_compact(curve, rng):
+    pts = jnp.asarray(rng.random((4096, 2)), jnp.float32)
+    cfg = partitioner.PartitionerConfig(curve=curve)
+    res = partitioner.partition(pts, None, num_parts=8, cfg=cfg)
+    frac = metrics.knn_cross_fraction(np.asarray(pts), np.asarray(res.part), k=4, sample=512)
+    # random assignment would cross ~ 7/8 = 0.875 of kNN edges
+    assert frac < 0.25, f"{curve} partition not compact: {frac}"
+
+
+def test_hilbert_cut_leq_morton(rng):
+    pts = jnp.asarray(rng.random((8192, 2)), jnp.float32)
+    fracs = {}
+    for curve in ("morton", "hilbert"):
+        cfg = partitioner.PartitionerConfig(curve=curve)
+        res = partitioner.partition(pts, None, num_parts=16, cfg=cfg)
+        fracs[curve] = metrics.knn_cross_fraction(
+            np.asarray(pts), np.asarray(res.part), k=4, sample=1024
+        )
+    assert fracs["hilbert"] <= fracs["morton"] * 1.1  # allow small noise
+
+
+def test_tree_pipeline_matches_quality(rng):
+    pts = jnp.asarray(rng.random((4096, 3)), jnp.float32)
+    cfg = partitioner.PartitionerConfig(use_tree=True, max_depth=10)
+    res = partitioner.partition(pts, None, num_parts=8, cfg=cfg)
+    loads = np.asarray(res.loads)
+    assert loads.max() - loads.min() <= 2.0 + 1e-3
+    frac = metrics.knn_cross_fraction(np.asarray(pts), np.asarray(res.part), k=4, sample=512)
+    assert frac < 0.3
+
+
+def test_pallas_path_matches_jnp(rng):
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    w = jnp.ones(2048, jnp.float32)
+    a = partitioner.partition(pts, w, 8, partitioner.PartitionerConfig(use_pallas=False))
+    b = partitioner.partition(pts, w, 8, partitioner.PartitionerConfig(use_pallas=True))
+    assert (np.asarray(a.part) == np.asarray(b.part)).all()
+
+
+def test_rank_stats_improves_clustered_balance(rng):
+    """Clustered data: rank quantization (median-splitter equivalent)
+    fills key space evenly -> finer effective resolution."""
+    clu = np.concatenate(
+        [rng.normal(0.02, 0.002, (6000, 3)), rng.random((2000, 3))]
+    ).astype(np.float32)
+    pts = jnp.asarray(clu)
+    for stats in ("geometric", "rank"):
+        cfg = partitioner.PartitionerConfig(stats=stats, bits=4)
+        res = partitioner.partition(pts, None, num_parts=8, cfg=cfg)
+        loads = np.asarray(res.loads)
+        if stats == "geometric":
+            geo_spread = loads.max() - loads.min()
+        else:
+            rank_spread = loads.max() - loads.min()
+    # at coarse bit budgets, geometric keys collapse the dense cluster into
+    # few cells (ties break balance); rank keys cannot collapse
+    assert rank_spread <= geo_spread

@@ -1,0 +1,61 @@
+"""Point location + k-NN (paper §V-A)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queries
+
+
+def test_point_location_exact(rng):
+    pts = jnp.asarray(rng.random((4096, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=32)
+    sel = rng.choice(4096, 512, replace=False)
+    q = pts[jnp.asarray(sel)]
+    found, gid = queries.point_location(idx, q)
+    assert bool(found.all())
+    # returned ids identify coordinates equal to the query
+    np.testing.assert_array_equal(np.asarray(pts)[np.asarray(gid)], np.asarray(q))
+
+
+def test_point_location_misses(rng):
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=32)
+    q = jnp.asarray(rng.random((256, 3)) + 2.0, jnp.float32)  # outside bbox
+    found, gid = queries.point_location(idx, q)
+    assert not bool(found.any())
+    assert (np.asarray(gid) == -1).all()
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_knn_recall(k, rng):
+    pts = jnp.asarray(rng.random((8192, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=32)
+    q = jnp.asarray(rng.random((128, 3)), jnp.float32)
+    d_a, id_a = queries.knn(idx, q, k=k, cutoff_buckets=2)
+    d_b, id_b = queries.knn_bruteforce(pts, q, k=k)
+    recall = float(
+        jnp.mean(jnp.any(id_a[:, :, None] == id_b[:, None, :], axis=1).astype(jnp.float32))
+    )
+    assert recall > 0.7, f"recall@{k}: {recall}"  # CUTOFF-bounded approximate k-NN
+
+
+def test_knn_distances_sorted_and_valid(rng):
+    pts = jnp.asarray(rng.random((2048, 2)), jnp.float32)
+    idx = queries.build_index(pts)
+    q = jnp.asarray(rng.random((64, 2)), jnp.float32)
+    d, ids = queries.knn(idx, q, k=3)
+    d = np.asarray(d)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    assert np.isfinite(d).all()
+
+
+@given(n=st.integers(100, 2000), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_property_self_query_returns_self(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=16)
+    q = pts[:64]
+    d, ids = queries.knn(idx, q, k=1, cutoff_buckets=1)
+    assert float(d.max()) <= 1e-6  # nearest neighbor of a stored point is itself
