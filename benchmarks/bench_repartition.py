@@ -1,0 +1,131 @@
+"""Incremental-step vs full-rebuild cost over a drifting load trace.
+
+The paper's economic claim (§IV): once the initial partition exists,
+adapting to a changed load distribution must cost a fraction of a cold
+partition. We replay a weight-drift trace over fixed geometry and time
+three policies on the same inputs:
+
+* cold      — `partitioner.partition` from scratch every step
+              (key-gen + sort + knapsack slice)
+* engine    — `Repartitioner.rebalance` (cached keys + cached order,
+              knapsack re-slice only)
+* distributed (optional, REPRO_BENCH_DIST=1, 8 fake host devices) —
+  `distributed_partition` vs `distributed_reslice` on cached shard keys
+
+    PYTHONPATH=src python benchmarks/bench_repartition.py [n] [steps]
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitioner as pt
+from repro.core.repartition import Repartitioner
+
+N = int(sys.argv[1]) if len(sys.argv) > 1 else 200_000
+STEPS = int(sys.argv[2]) if len(sys.argv) > 2 else 10
+PARTS = 16
+CFG = pt.PartitionerConfig(curve="hilbert")
+
+
+def drift_trace(rng, n, steps):
+    """Multiplicative load drift: a moving hot region on the unit cube."""
+    base = 1.0 + rng.random(n).astype(np.float32)
+    pts = rng.random((n, 3)).astype(np.float32)
+    out = []
+    for t in range(steps):
+        c = np.array([0.2 + 0.06 * t, 0.5, 0.5], np.float32)
+        hot = np.exp(-np.sum((pts - c) ** 2, axis=1) / 0.02)
+        out.append(base * (1.0 + 4.0 * hot).astype(np.float32))
+    return pts, out
+
+
+def timed(fn, *args, warmup=1, reps=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps, out
+
+
+def main():
+    rng = np.random.default_rng(0)
+    pts_h, trace = drift_trace(rng, N, STEPS)
+    pts = jnp.asarray(pts_h)
+
+    # --- cold full rebuild every step ------------------------------------
+    def cold(w):
+        return pt.partition(pts, w, PARTS, CFG).part
+
+    cold_ts = []
+    for w in trace:
+        dt, _ = timed(cold, jnp.asarray(w), warmup=0)
+        cold_ts.append(dt)
+    # first call pays compile; report the steady-state median
+    cold_ms = float(np.median(cold_ts[1:]) * 1e3)
+
+    # --- incremental engine ----------------------------------------------
+    # fixed geometry: size storage exactly (capacity=2n only pays off when
+    # the trace inserts points)
+    engine = Repartitioner(pts, jnp.asarray(trace[0]), PARTS, CFG, max_depth=10, capacity=N)
+
+    def incr(w):
+        engine.update_weights(w)
+        return engine.rebalance().part
+
+    incr_ts = []
+    for w in trace:
+        dt, _ = timed(incr, jnp.asarray(w), warmup=0)
+        incr_ts.append(dt)
+    incr_ms = float(np.median(incr_ts[1:]) * 1e3)
+
+    # same balance quality? (identical curve order => identical slices)
+    wl = jnp.asarray(trace[-1])
+    cold_part = np.asarray(cold(wl))
+    engine.update_weights(wl)
+    loads_c = np.bincount(cold_part, weights=trace[-1], minlength=PARTS)
+    loads_i = np.asarray(engine.rebalance().loads)
+    imb = lambda l: l.max() / l.mean()
+
+    print(f"n={N} steps={STEPS} parts={PARTS} curve={CFG.curve}")
+    print(f"cold full rebuild : {cold_ms:9.2f} ms/step   imbalance {imb(loads_c):.4f}")
+    print(f"incremental engine: {incr_ms:9.2f} ms/step   imbalance {imb(loads_i):.4f}")
+    print(f"speedup           : {cold_ms / max(incr_ms, 1e-9):9.1f}x")
+
+    if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and len(jax.devices()) >= 8:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.repartition import DistributedRepartitioner
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+        sh = NamedSharding(mesh, P("data"))
+        n8 = (N // 8) * 8
+        dpts = jax.device_put(pts[:n8], sh)
+        dwts = jax.device_put(jnp.asarray(trace[0][:n8]), sh)
+        eng = DistributedRepartitioner(mesh, "data", PARTS, CFG)
+
+        full_t, (_, wsrt, _) = timed(lambda: eng.partition(dpts, dwts))
+        # drift the sorted-layout weights in place (weight-only change)
+        w2 = jnp.where(wsrt >= 0, wsrt * 1.5, wsrt)
+        res_t, _ = timed(lambda: eng.rebalance(w2))
+        print(f"distributed full  : {full_t*1e3:9.2f} ms")
+        print(f"distributed reslice: {res_t*1e3:8.2f} ms   "
+              f"({full_t/max(res_t,1e-9):.1f}x)")
+
+    if incr_ms >= cold_ms:
+        print("WARNING: incremental step not cheaper than cold rebuild")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Small jax version-compat layer.
+
+The repo targets current jax but must degrade gracefully on the 0.4.x
+runtime baked into the CPU CI container:
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+  and renamed ``check_rep`` -> ``check_vma``.
+* ``jax.sharding.AxisType`` (explicit-sharding axis types) does not exist
+  on 0.4.x; `repro.launch.mesh` handles that one locally.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )

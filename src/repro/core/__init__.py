@@ -7,6 +7,7 @@ from repro.core import (  # noqa: F401
     migration,
     partitioner,
     queries,
+    repartition,
     sfc,
     spmv,
 )
@@ -14,5 +15,11 @@ from repro.core.partitioner import (  # noqa: F401
     PartitionerConfig,
     PartitionResult,
     distributed_partition,
+    distributed_reslice,
     partition,
+)
+from repro.core.repartition import (  # noqa: F401
+    DistributedRepartitioner,
+    Repartitioner,
+    RepartitionStep,
 )

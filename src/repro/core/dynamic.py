@@ -109,19 +109,38 @@ def insert(dps: DynamicPointSet, new_pts: jax.Array, new_wts: jax.Array) -> Dyna
 
 
 def delete(dps: DynamicPointSet, slot_ids: jax.Array) -> DynamicPointSet:
-    """Deactivate points by storage slot id."""
-    wts = dps.weights[slot_ids] * dps.active[slot_ids]
-    tree = _bump_counts(dps.tree, dps.leaf_id[slot_ids], wts, sign=-1)
+    """Deactivate points by storage slot id. Already-inactive ids and
+    duplicates (within or across calls) are no-ops: the weight and count
+    decrements are masked by ``active`` and a first-occurrence filter, so
+    tree counters stay consistent with storage."""
+    order = jnp.argsort(slot_ids, stable=True)
+    sorted_ids = slot_ids[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
+    )
+    first = jnp.zeros_like(first_sorted).at[order].set(first_sorted)
+    act = dps.active[slot_ids] & first
+    wts = dps.weights[slot_ids] * act
+    tree = _bump_counts(
+        dps.tree, dps.leaf_id[slot_ids], wts, sign=-1, counts=act.astype(jnp.int32)
+    )
     active = dps.active.at[slot_ids].set(False)
     return dps._replace(active=active, tree=tree)
 
 
-def _bump_counts(tree: LinearKdTree, leaf_ids: jax.Array, wts: jax.Array, sign: int) -> LinearKdTree:
+def _bump_counts(
+    tree: LinearKdTree,
+    leaf_ids: jax.Array,
+    wts: jax.Array,
+    sign: int,
+    counts: jax.Array | None = None,
+) -> LinearKdTree:
     """Add +-(count, weight) along all root→leaf paths (vectorized over the
-    batch, one scatter-add per level)."""
+    batch, one scatter-add per level). ``counts`` overrides the default
+    count delta of 1 per id (used to mask no-op deletes)."""
     count, weight = tree.count, tree.weight
     node = leaf_ids
-    ones = jnp.ones_like(leaf_ids) * sign
+    ones = (jnp.ones_like(leaf_ids) if counts is None else counts) * sign
     swts = wts * sign
     for _ in range(tree.max_depth + 1):
         count = count.at[node].add(ones)

@@ -9,10 +9,13 @@ check conservation and round counts) and a shard_map executor.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat as _compat
 import numpy as np
 
 
@@ -29,6 +32,29 @@ class MigrationPlan:
         total = self.send_counts.sum()
         stay = np.trace(self.send_counts)
         return float(stay) / max(float(total), 1.0)
+
+
+def plan_from_counts(
+    send: np.ndarray,
+    *,
+    max_msg_bytes: int = 4 << 20,
+    bytes_per_elem: int = 16,
+) -> MigrationPlan:
+    """Build the round schedule from a precomputed (P, P) count matrix
+    (e.g. one reduced on-device by the repartitioning engine)."""
+    send = np.asarray(send, dtype=np.int64)
+    off_diag = send.copy()
+    np.fill_diagonal(off_diag, 0)
+    max_pair = int(off_diag.max()) if off_diag.size else 0
+    chunk = max(1, max_msg_bytes // bytes_per_elem)
+    rounds = int(np.ceil(max_pair / chunk)) if max_pair else 0
+    return MigrationPlan(
+        send_counts=send,
+        rounds=rounds,
+        chunk=chunk,
+        total_moved=int(off_diag.sum()),
+        max_pair=max_pair,
+    )
 
 
 def migration_plan(
@@ -106,6 +132,14 @@ def execute_shard_exchange(
     caller picks ``capacity`` from the migration plan (chunk size); calling
     this in a loop over rounds gives the paper's bounded-message exchange.
     """
+    return _exchange_fn(mesh, axis, capacity, fill_value)(payload, dest)
+
+
+@functools.lru_cache(maxsize=64)
+def _exchange_fn(mesh: jax.sharding.Mesh, axis: str, capacity: int, fill_value):
+    """Jitted exchange executor, memoized per static config. shard_map'd
+    callables must run under jit — eager execution dispatches every traced
+    op as its own SPMD program (see partitioner._reslice_fn)."""
     from jax.sharding import PartitionSpec as P
 
     nshards = mesh.shape[axis]
@@ -125,11 +159,10 @@ def execute_shard_exchange(
         rval = jax.lax.all_to_all(val, axis, split_axis=0, concat_axis=0)
         return rbuf.reshape((-1,) + x.shape[1:]), rval.reshape(-1)
 
-    fn = jax.shard_map(
+    return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),
         check_vma=False,
-    )
-    return fn(payload, dest)
+    ))

@@ -21,6 +21,8 @@ from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat as _compat
 from jax.sharding import PartitionSpec as P
 
 from repro.core import kdtree as _kdtree
@@ -104,6 +106,78 @@ def partition(
 # Distributed partition (shard_map sample-sort + global knapsack)
 # ---------------------------------------------------------------------------
 
+def _global_curve_slice(
+    w_local: jax.Array,
+    valid: jax.Array,
+    axis: str,
+    me: jax.Array,
+    nshards: int,
+    num_parts: int,
+) -> jax.Array:
+    """Greedy-knapsack slice of the *globally ordered* weighted curve.
+
+    Runs inside shard_map: each shard holds a contiguous chunk of the
+    curve (shard rank = curve rank). One all_gather of local weight sums
+    gives every shard its exclusive global prefix; the slice itself is
+    then local. This is the only collective a weight-only rebalance needs
+    — the incremental path (`distributed_reslice`) calls it directly on
+    cached keys, skipping key-gen and the sample-sort all_to_all.
+    """
+    w_masked = jnp.where(valid, w_local, 0.0)
+    local_sum = jnp.sum(w_masked)
+    sums = jax.lax.all_gather(local_sum, axis)  # (nshards,)
+    offset = jnp.sum(jnp.where(jnp.arange(nshards) < me, sums, 0.0))
+    total = jnp.sum(sums)
+    prefix = offset + jnp.cumsum(w_masked) - w_masked
+    ideal = jnp.maximum(total / num_parts, 1e-9)
+    part = jnp.floor((prefix + 0.5 * w_masked) / ideal).astype(jnp.int32)
+    part = jnp.clip(part, 0, num_parts - 1)
+    return jnp.where(valid, part, -1)
+
+
+def distributed_reslice(
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    weights_sorted: jax.Array,
+    valid: jax.Array,
+    num_parts: int,
+) -> jax.Array:
+    """Weight-only rebalance over an existing distributed curve order.
+
+    ``weights_sorted``/``valid`` are laid out exactly as returned by
+    `distributed_partition` (shard i holds the i-th contiguous chunk of
+    the global SFC order; invalid = padding slots). Because the curve
+    order is unchanged, no keys are generated and no sample-sort exchange
+    runs — the cost is one all_gather of P scalars plus a local scan,
+    versus the full partition's key-gen + sort + all_to_all.
+    """
+    return _reslice_fn(mesh, axis, num_parts)(weights_sorted, valid)
+
+
+@functools.lru_cache(maxsize=64)
+def _reslice_fn(mesh: jax.sharding.Mesh, axis: str, num_parts: int):
+    """Jitted reslice executor, memoized per (mesh, axis, P).
+
+    shard_map'd callables must run under jit: executed eagerly, every
+    traced op dispatches as its own SPMD program (measured 42 s vs 2 s
+    for the full partition kernel on 8 host devices). The lru_cache keeps
+    the jitted closure alive so repeat calls hit jit's own cache.
+    """
+    nshards = mesh.shape[axis]
+
+    def kernel(wts, val):
+        me = jax.lax.axis_index(axis)
+        return _global_curve_slice(wts, val, axis, me, nshards, num_parts)
+
+    return jax.jit(_compat.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,
+    ))
+
+
 def distributed_partition(
     mesh: jax.sharding.Mesh,
     axis: str,
@@ -131,9 +205,20 @@ def distributed_partition(
       5. global weighted exclusive prefix (psum over lower-ranked shards)
          feeding the greedy-knapsack slice.
     """
+    return _partition_fn(mesh, axis, num_parts, cfg, oversample)(points, weights)
+
+
+@functools.lru_cache(maxsize=64)
+def _partition_fn(
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    num_parts: int,
+    cfg: PartitionerConfig,
+    oversample: int,
+):
+    """Jitted sample-sort partition executor, memoized per static config
+    (see `_reslice_fn` for why shard_map must run under jit)."""
     nshards = mesh.shape[axis]
-    n_local = points.shape[0] // nshards if points.ndim else 0
-    del n_local
 
     def kernel(pts, wts):
         # pts: (n_loc, d), wts: (n_loc,)
@@ -184,23 +269,13 @@ def distributed_partition(
         valid = recv_k != SENT
 
         # --- global weighted prefix + knapsack slice ----------------------
-        w_masked = jnp.where(valid, recv_w, 0.0)
-        local_sum = jnp.sum(w_masked)
-        sums = jax.lax.all_gather(local_sum, axis)  # (nshards,)
-        offset = jnp.sum(jnp.where(jnp.arange(nshards) < me, sums, 0.0))
-        total = jnp.sum(sums)
-        prefix = offset + jnp.cumsum(w_masked) - w_masked
-        ideal = jnp.maximum(total / num_parts, 1e-9)
-        part = jnp.floor((prefix + 0.5 * w_masked) / ideal).astype(jnp.int32)
-        part = jnp.clip(part, 0, num_parts - 1)
-        part = jnp.where(valid, part, -1)
+        part = _global_curve_slice(recv_w, valid, axis, me, nshards, num_parts)
         return recv_k, jnp.where(valid, recv_w, -1.0), part
 
-    fn = jax.shard_map(
+    return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
-    )
-    return fn(points, weights)
+    ))

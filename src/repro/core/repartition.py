@@ -1,0 +1,415 @@
+"""Incremental repartitioning engine (paper §IV, wired end-to-end).
+
+The paper's headline economics: a *repeated* repartition of a drifting
+load distribution must cost far less than the initial one. The static
+pipeline (``partitioner.partition``) pays key generation + sort + slice
+every call. This module keeps the expensive artifacts alive across
+timesteps and only recomputes what a delta invalidates:
+
+===========================  =========================================
+change                       work done
+===========================  =========================================
+weights only                 re-slice the cached curve (no key-gen,
+                             no sort, no tree work)
+insert / delete points       key-gen for the delta batch only, re-sort
+                             cached keys, re-slice; kd-tree updated via
+                             ``dynamic.insert``/``delete`` bumps
+credit exhaustion            full rebuild: ``dynamic.adjustments``
+                             (Alg. 1), fresh quantization frame, fresh
+                             keys (Alg. 3 decides *when*)
+===========================  =========================================
+
+Keys are generated against a **frozen quantization frame** (the bounding
+box captured at the last rebuild, with margin). This is what makes
+cached keys reusable at all — the static path re-fits the box every
+call, so old keys would silently shift. Points drifting outside the
+frame are clipped into the boundary cells until the next rebuild
+refreshes the frame.
+
+Every step emits a ``migration.MigrationPlan`` so the application can
+move payloads with the bounded-message exchange. Storage-slot ids are
+the stable element identity across steps.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic as _dyn
+from repro.core import knapsack as _knapsack
+from repro.core import migration as _migration
+from repro.core import partitioner as _pt
+from repro.core import sfc as _sfc
+
+KEY_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def _slice_kernel(order, active, weights, num_parts):
+    """Fused incremental re-slice: gather weights into curve order,
+    knapsack-slice, scatter part ids back to slots. One dispatch per
+    step — this IS the incremental path's entire device work."""
+    act_sorted = active[order]
+    w_sorted = jnp.where(act_sorted, weights[order], 0.0)
+    part_sorted = _knapsack.slice_weighted_curve(w_sorted, num_parts)
+    part_sorted = jnp.where(act_sorted, part_sorted, -1)
+    part = jnp.full(order.shape, -1, jnp.int32).at[order].set(part_sorted)
+    loads = _knapsack.part_loads(w_sorted, jnp.maximum(part_sorted, 0), num_parts)
+    return part, loads
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def _send_counts_kernel(old_part, new_part, num_parts):
+    """(P, P) migration count matrix, reduced on device (elements active
+    in both assignments only)."""
+    both = (old_part >= 0) & (new_part >= 0)
+    idx = jnp.where(both, old_part * num_parts + new_part, num_parts * num_parts)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(idx), idx, num_segments=num_parts * num_parts + 1
+    )
+    return counts[:-1].reshape(num_parts, num_parts)
+
+
+@dataclass(frozen=True)
+class RepartitionStep:
+    """One engine step: the new assignment plus how we got it."""
+
+    kind: Literal["incremental", "rebuild"]
+    part: jax.Array            # (C,) int32 part per storage slot, -1 inactive
+    plan: _migration.MigrationPlan
+    loads: np.ndarray          # (P,) weight per part
+    imbalance: float           # max load / mean load
+    reused_keys: bool          # True iff no key generation ran this step
+
+
+@dataclass
+class RepartitionStats:
+    rebuilds: int = 0
+    incremental_steps: int = 0
+    # storage slots run through key generation; rebuilds are
+    # capacity-shaped (fixed-shape kernels), inserts count the delta batch
+    keygen_points: int = 0
+    history: list = field(default_factory=list)
+
+
+class Repartitioner:
+    """Stateful incremental repartitioner over a dynamic point set.
+
+    >>> rp = Repartitioner(points, weights, num_parts=16)
+    >>> rp.update_weights(new_weights)      # drift the load
+    >>> step = rp.step()                    # incremental or full rebuild
+    >>> step.plan.total_moved, step.kind
+
+    The amortized controller (paper Alg. 3) decides incremental-vs-rebuild
+    inside ``step``; ``rebalance()`` / ``rebuild()`` force one or the
+    other. ``insert``/``delete`` apply geometry deltas through the cached
+    linearized kd-tree (``dynamic.locate``), so point location for the
+    delta batch is a root→leaf walk, not a build.
+    """
+
+    def __init__(
+        self,
+        points: jax.Array,
+        weights: jax.Array | None = None,
+        num_parts: int = 8,
+        cfg: _pt.PartitionerConfig = _pt.PartitionerConfig(),
+        *,
+        capacity: int | None = None,
+        max_depth: int = 12,
+        bucket_size: int = 32,
+        controller: _dyn.AmortizedController | None = None,
+        rebuild_cost: float | None = None,
+        frame_margin: float = 0.25,
+    ):
+        n, d = points.shape
+        if weights is None:
+            weights = jnp.ones((n,), dtype=jnp.float32)
+        self.num_parts = int(num_parts)
+        self.cfg = cfg
+        self.bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(d)
+        self.frame_margin = float(frame_margin)
+        self.controller = controller or _dyn.AmortizedController()
+        # modeled cost of one full rebuild in controller units; default is
+        # calibrated in rebuild() from the live imbalance baseline
+        self._rebuild_cost = rebuild_cost
+        self.stats = RepartitionStats()
+        self._cache_token = 0
+
+        self.dps = _dyn.from_points(
+            points,
+            weights,
+            capacity=capacity,
+            max_depth=max_depth,
+            bucket_size=bucket_size,
+            splitter=cfg.splitter,
+        )
+        self._part = jnp.full((self.capacity,), -1, dtype=jnp.int32)
+        self.rebuild()
+
+    # -- basic accessors ----------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.dps.capacity
+
+    @property
+    def part(self) -> jax.Array:
+        """(C,) int32 part id per storage slot (-1 for inactive slots)."""
+        return self._part
+
+    @property
+    def cache_token(self) -> int:
+        """Bumped whenever cached keys are invalidated (geometry/frame
+        change); `repro.kernels.ops.cached_sfc_key` uses it as the cache
+        key for the Pallas key-gen path."""
+        return self._cache_token
+
+    def num_active(self) -> int:
+        return int(self.dps.active.sum())
+
+    # -- key generation against the frozen frame ----------------------------
+
+    def _freeze_frame(self) -> None:
+        pts = np.asarray(self.dps.points)
+        act = np.asarray(self.dps.active)
+        live = pts[act] if act.any() else np.zeros((1, pts.shape[1]), np.float32)
+        lo, hi = live.min(axis=0), live.max(axis=0)
+        span = np.where(hi > lo, hi - lo, 1.0)
+        self._frame_lo = jnp.asarray(lo - self.frame_margin * span, jnp.float32)
+        self._frame_hi = jnp.asarray(hi + self.frame_margin * span, jnp.float32)
+
+    def _keys_in_frame(self, pts: jax.Array, *, cache: bool = False) -> jax.Array:
+        """SFC keys against the frozen quantization frame (clipped).
+
+        ``cache=True`` (the full-capacity rebuild path) routes through
+        `kernels.ops.cached_sfc_key` under this engine's token, so the
+        key batch is shared with any other consumer of the same token and
+        dropped by `_invalidate_keys` on the next rebuild. Delta batches
+        (inserts) compute directly — tiny, shape-varied, not worth cache
+        entries.
+        """
+        if cache:
+            from repro.kernels import ops as _kops
+
+            keys = _kops.cached_sfc_key(
+                pts,
+                token=self._cache_token,
+                curve=self.cfg.curve,
+                bits=self.bits,
+                use_pallas=self.cfg.use_pallas,
+                lo=self._frame_lo,
+                hi=self._frame_hi,
+            )
+        else:
+            span = jnp.where(
+                self._frame_hi > self._frame_lo, self._frame_hi - self._frame_lo, 1.0
+            )
+            unit = jnp.clip((pts - self._frame_lo) / span, 0.0, 1.0 - 1e-7)
+            cells = (unit * (2**self.bits)).astype(jnp.uint32)
+            if self.cfg.curve == "morton":
+                keys = _sfc.morton_key_from_cells(cells, self.bits)
+            else:
+                keys = _sfc.hilbert_key_from_cells(cells, self.bits)
+        self.stats.keygen_points += int(pts.shape[0])
+        return keys
+
+    def _invalidate_keys(self) -> None:
+        self._cache_token += 1
+        try:  # notify the kernel-level cache (best effort: optional dep)
+            from repro.kernels import ops as _kops
+
+            _kops.invalidate_key_cache(self._cache_token - 1)
+        except ImportError:  # pragma: no cover
+            pass
+
+    # -- delta operations ----------------------------------------------------
+
+    def update_weights(self, weights: jax.Array, slot_ids: jax.Array | None = None) -> None:
+        """Replace weights (full (C,)/(n_active,) vector, or a sparse batch
+        at ``slot_ids``). Weight changes never invalidate cached keys."""
+        if slot_ids is not None:
+            new_w = self.dps.weights.at[jnp.asarray(slot_ids)].set(weights)
+        else:
+            weights = jnp.asarray(weights, jnp.float32)
+            k = weights.shape[0]
+            if k == self.capacity:
+                new_w = weights
+            elif k == self.num_active():  # aligned with active slots in slot order
+                act_slots = jnp.nonzero(self.dps.active, size=k)[0]
+                new_w = self.dps.weights.at[act_slots].set(weights)
+            else:
+                # any other length would silently scatter the tail into
+                # slot 0 (fixed-shape nonzero pads with 0)
+                raise ValueError(
+                    f"weights length {k} matches neither capacity "
+                    f"({self.capacity}) nor active count ({self.num_active()})"
+                )
+        self.dps = self.dps._replace(weights=new_w)
+
+    def insert(self, points: jax.Array, weights: jax.Array) -> jax.Array:
+        """Insert a point batch; returns their storage slot ids. Keys are
+        generated for the delta batch only (frozen frame); the cached
+        curve order is re-sorted but not re-keyed."""
+        k = points.shape[0]
+        n_free = self.capacity - self.num_active()
+        if k > n_free:
+            # without this check the overflow scatters into one slot and
+            # silently drops points (fixed-shape nonzero fill semantics)
+            raise ValueError(
+                f"insert of {k} points exceeds free capacity {n_free}; "
+                f"grow the Repartitioner (capacity={self.capacity})"
+            )
+        free = jnp.nonzero(~self.dps.active, size=k, fill_value=self.capacity - 1)[0]
+        self.dps = _dyn.insert(self.dps, points, weights)
+        self._keys = self._keys.at[free].set(self._keys_in_frame(points))
+        self._resort()
+        return free
+
+    def delete(self, slot_ids: jax.Array) -> None:
+        slot_ids = jnp.asarray(slot_ids)
+        self.dps = _dyn.delete(self.dps, slot_ids)
+        self._keys = self._keys.at[slot_ids].set(jnp.uint32(KEY_SENTINEL))
+        self._resort()
+
+    def _resort(self) -> None:
+        # sentinel keys (inactive slots) sort to the end; no key-gen here
+        self._order = jnp.argsort(self._keys, stable=True)
+
+    # -- slicing -------------------------------------------------------------
+
+    def _slice_current(self) -> tuple[jax.Array, np.ndarray, float]:
+        """Knapsack-slice the cached curve; returns (part_per_slot, loads,
+        imbalance)."""
+        part, loads_d = _slice_kernel(
+            self._order, self.dps.active, self.dps.weights, self.num_parts
+        )
+        loads = np.asarray(loads_d)
+        mean = max(float(loads.mean()), 1e-12)
+        return part, loads, float(loads.max()) / mean
+
+    def _emit(self, kind: str, part: jax.Array, loads, imbalance, reused: bool) -> RepartitionStep:
+        # stable elements only (active in both assignments) migrate
+        counts = _send_counts_kernel(self._part, part, self.num_parts)
+        plan = _migration.plan_from_counts(np.asarray(counts))
+        self._part = part
+        self.stats.history.append((kind, float(imbalance), int(plan.total_moved)))
+        return RepartitionStep(
+            kind=kind, part=part, plan=plan, loads=loads,
+            imbalance=imbalance, reused_keys=reused,
+        )
+
+    # -- public stepping ------------------------------------------------------
+
+    def rebalance(self) -> RepartitionStep:
+        """Force an incremental re-slice of the cached curve (no key-gen,
+        no tree adjustment)."""
+        part, loads, imb = self._slice_current()
+        self.stats.incremental_steps += 1
+        return self._emit("incremental", part, loads, imb, reused=True)
+
+    def rebuild(self) -> RepartitionStep:
+        """Force a full rebuild: tree adjustments, fresh frame, fresh keys."""
+        if self.stats.rebuilds or self.stats.incremental_steps:
+            # skip Alg. 1 on the pristine initial build
+            self.dps = _dyn.adjustments(self.dps)
+        self._freeze_frame()
+        self._invalidate_keys()
+        act = self.dps.active
+        keys = self._keys_in_frame(self.dps.points, cache=True)
+        self._keys = jnp.where(act, keys, jnp.uint32(KEY_SENTINEL))
+        self._resort()
+        part, loads, imb = self._slice_current()
+        self.stats.rebuilds += 1
+        cost = self._rebuild_cost if self._rebuild_cost is not None else float(self.num_active())
+        self.controller.balanced(
+            lb_cost=cost, num_buckets=int(_dyn.num_buckets(self.dps)), timeop=imb
+        )
+        return self._emit("rebuild", part, loads, imb, reused=False)
+
+    def step(self, timeop: float | None = None) -> RepartitionStep:
+        """One engine step: consult the amortized controller (Alg. 3) and
+        either re-slice incrementally or run a full rebuild.
+
+        ``timeop`` is the measured per-op cost this iteration; when absent
+        the live load imbalance (max/mean) of the *current* assignment
+        under the *new* weights stands in for it — a hot part means slow
+        ops, which is exactly the drift the credit scheme meters.
+        """
+        if timeop is None:
+            loads = np.zeros(self.num_parts, np.float64)
+            part = np.asarray(self._part)
+            w = np.asarray(self.dps.weights) * np.asarray(self.dps.active)
+            np.add.at(loads, np.maximum(part, 0), np.where(part >= 0, w, 0.0))
+            timeop = float(loads.max() / max(loads.mean(), 1e-12))
+        fire = self.controller.observe(timeop, int(_dyn.num_buckets(self.dps)))
+        return self.rebuild() if fire else self.rebalance()
+
+
+# ---------------------------------------------------------------------------
+# Distributed engine: cached per-shard keys over `distributed_partition`
+# ---------------------------------------------------------------------------
+
+class DistributedRepartitioner:
+    """Incremental repartitioning over a device mesh.
+
+    ``partition(points, weights)`` runs the full distributed pipeline
+    (key-gen → sample-sort all_to_all → global knapsack) and caches the
+    per-shard sorted keys + validity mask. ``rebalance(weights_sorted)``
+    then answers weight-only load changes with a single
+    `partitioner.distributed_reslice` — one P-scalar all_gather plus a
+    local scan, with the cached keys never touched. Geometry changes
+    require a fresh ``partition``.
+    """
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        axis: str,
+        num_parts: int,
+        cfg: _pt.PartitionerConfig = _pt.PartitionerConfig(),
+        oversample: int = 8,
+    ):
+        self.mesh, self.axis = mesh, axis
+        self.num_parts = int(num_parts)
+        self.cfg, self.oversample = cfg, oversample
+        self.keys_sorted: jax.Array | None = None
+        self.valid: jax.Array | None = None
+        self._part_sorted: jax.Array | None = None
+        self.full_partitions = 0
+        self.reslices = 0
+
+    def partition(self, points: jax.Array, weights: jax.Array):
+        keys, wts, part = _pt.distributed_partition(
+            self.mesh, self.axis, points, weights, self.num_parts,
+            cfg=self.cfg, oversample=self.oversample,
+        )
+        self.keys_sorted = keys
+        self.valid = wts >= 0
+        self._part_sorted = part
+        self.full_partitions += 1
+        return keys, wts, part
+
+    def rebalance(self, weights_sorted: jax.Array) -> jax.Array:
+        """Weight-only rebalance; ``weights_sorted`` is laid out like the
+        weights returned by ``partition`` (the cached curve order)."""
+        if self.valid is None:
+            raise RuntimeError("rebalance() before the first partition()")
+        part = _pt.distributed_reslice(
+            self.mesh, self.axis, weights_sorted, self.valid, self.num_parts
+        )
+        self._part_sorted = part
+        self.reslices += 1
+        return part
+
+    def migration_between(self, old_part: jax.Array, new_part: jax.Array) -> _migration.MigrationPlan:
+        """Bounded-message exchange plan between two sorted-layout
+        assignments (invalid slots excluded)."""
+        valid = np.asarray(self.valid)
+        return _migration.migration_plan(
+            np.asarray(old_part)[valid], np.asarray(new_part)[valid], self.num_parts
+        )

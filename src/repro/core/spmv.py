@@ -18,6 +18,8 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat as _compat
 import numpy as np
 
 from repro.core import sfc as _sfc
@@ -203,13 +205,15 @@ def distributed_spmv(
         mine = jax.lax.psum_scatter(y_partial, axis, scatter_dimension=0, tiled=True)
         return mine
 
-    fn = jax.shard_map(
+    # shard_map must run under jit: eager execution dispatches every
+    # traced op as its own SPMD program (see partitioner._reslice_fn)
+    fn = jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
         out_specs=P(axis),
         check_vma=False,
-    )
+    ))
     y = fn(r_d, c_d, v_d, x_pad)
     return y[:n]
 

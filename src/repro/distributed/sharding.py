@@ -24,6 +24,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -293,3 +294,50 @@ def cache_shardings(mesh: Mesh, cfg: ModelConfig, rules: ShardingRules, cache_sh
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# dynamic element placement (repartitioning engine integration)
+# ---------------------------------------------------------------------------
+
+def curve_sharding(mesh: Mesh, axis: str) -> NamedSharding:
+    """Sharding for curve-ordered element arrays: shard i of ``axis`` holds
+    the i-th contiguous chunk of the global SFC order (the layout produced
+    by `repro.core.partitioner.distributed_partition`)."""
+    return NamedSharding(mesh, P(axis))
+
+
+def apply_repartition(
+    mesh: Mesh,
+    axis: str,
+    payload: jax.Array,
+    part: jax.Array,
+    *,
+    capacity: int | None = None,
+    fill_value=0,
+):
+    """Move rows of ``payload`` (sharded on dim 0 over ``axis``) to the
+    shard given by ``part`` — the output of a `Repartitioner` step or
+    `distributed_reslice`. Invalid rows (part < 0) are parked on their
+    current shard and masked out of the result.
+
+    Returns (received, valid_mask) in the fixed-capacity layout of
+    `migration.execute_shard_exchange`. ``capacity`` is per (src, dst)
+    pair *including* stay-home rows; the default — one shard's full row
+    count — is the smallest value that can never drop a row (a pair
+    cannot carry more than its source shard holds). Pass something
+    smaller only with a migration plan proving the worst pair is small.
+    """
+    from repro.core import migration as _migration
+
+    nshards = mesh.shape[axis]
+    n_rows = payload.shape[0]
+    if capacity is None:
+        capacity = max(1, int(np.ceil(n_rows / nshards)))
+    # P(axis) = contiguous chunks: row r lives on shard r*S//n
+    me_rows = (jnp.arange(n_rows) * nshards) // n_rows  # park invalid rows locally
+    dest = jnp.where(part >= 0, part, me_rows).astype(jnp.int32)
+    recv, valid = _migration.execute_shard_exchange(
+        mesh, axis, payload, dest, capacity, fill_value=fill_value
+    )
+    return recv, valid

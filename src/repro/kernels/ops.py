@@ -21,6 +21,98 @@ from repro.kernels import morton as _mor
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
+# ---------------------------------------------------------------------------
+# SFC key cache (repartitioning hot path)
+#
+# The incremental repartitioner re-slices the weighted curve many times
+# between geometry changes; key generation is the dominant cost it can
+# skip. Callers tag a key batch with an explicit ``token`` (bumped by the
+# owner whenever the underlying points or quantization frame change) and
+# the cache returns the stored keys for (token, curve, bits, stats,
+# shape). Invalidation is explicit — there is no content hashing, so a
+# caller that mutates points without bumping its token gets stale keys.
+# ---------------------------------------------------------------------------
+
+_KEY_CACHE: dict[tuple, jax.Array] = {}
+_KEY_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def invalidate_key_cache(token=None) -> int:
+    """Drop cached keys. ``token=None`` clears everything; otherwise only
+    entries generated under that token. Returns the number of entries
+    dropped. Called automatically by ``set_interpret`` (a backend switch
+    may change key bit layouts in interpret-vs-compiled edge cases)."""
+    if token is None:
+        n = len(_KEY_CACHE)
+        _KEY_CACHE.clear()
+        return n
+    drop = [k for k in _KEY_CACHE if k[0] == token]
+    for k in drop:
+        del _KEY_CACHE[k]
+    return len(drop)
+
+
+def key_cache_stats() -> dict:
+    return dict(_KEY_CACHE_STATS, entries=len(_KEY_CACHE))
+
+
+def set_interpret(flag: bool) -> None:
+    """Toggle Pallas interpret mode; invalidates the key cache."""
+    global INTERPRET
+    INTERPRET = bool(flag)
+    invalidate_key_cache()
+
+
+def cached_sfc_key(
+    points: jax.Array,
+    *,
+    token,
+    curve: str = "hilbert",
+    bits: int | None = None,
+    stats: str = "geometric",
+    use_pallas: bool = False,
+    lo: jax.Array | None = None,
+    hi: jax.Array | None = None,
+) -> jax.Array:
+    """Key generation with token-based caching (see module note above).
+
+    ``lo``/``hi`` quantize against a *fixed frame* instead of the data's
+    own bounding box — the repartitioning engine's frozen-frame path,
+    where the frame (and hence the cached keys) only changes when the
+    owner bumps ``token``. The frame arrays are deliberately NOT part of
+    the cache key: they are a function of the token by contract.
+    """
+    ck = (token, curve, bits, stats, points.shape, bool(use_pallas), lo is not None)
+    hit = _KEY_CACHE.get(ck)
+    if hit is not None:
+        _KEY_CACHE_STATS["hits"] += 1
+        return hit
+    _KEY_CACHE_STATS["misses"] += 1
+    if lo is not None:
+        b = bits if bits is not None else _sfc.max_bits_per_dim(points.shape[1])
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        unit = jnp.clip((points - lo) / span, 0.0, 1.0 - 1e-7)
+        cells = (unit * (2**b)).astype(jnp.uint32)
+        if use_pallas:
+            fn = _mor.morton_from_cells if curve == "morton" else _hil.hilbert_from_cells
+            keys = fn(cells, b, interpret=INTERPRET)
+        else:
+            fn = (
+                _sfc.morton_key_from_cells
+                if curve == "morton"
+                else _sfc.hilbert_key_from_cells
+            )
+            keys = fn(cells, b)
+    elif use_pallas:
+        fn = morton_key if curve == "morton" else hilbert_key
+        keys = fn(points, bits, stats=stats)
+    else:
+        fn = _sfc.morton_key if curve == "morton" else _sfc.hilbert_key
+        keys = fn(points, bits, stats=stats)
+    _KEY_CACHE[ck] = keys
+    return keys
+
+
 def morton_key(points: jax.Array, bits: int | None = None, *, stats: str = "geometric") -> jax.Array:
     n, d = points.shape
     if bits is None:

@@ -1,0 +1,112 @@
+"""Hypothesis compatibility shim for bare environments.
+
+The property tests use only ``integers`` / ``floats`` / ``sampled_from``
+strategies with ``@given`` + ``@settings``. When the real ``hypothesis``
+package is installed we re-export it untouched and get full shrinking /
+example databases. When it is absent (the minimal CI container), a tiny
+fixed-example fallback runs each property on a deterministic seeded
+sample of the strategy space, so the suite still collects and exercises
+the invariants instead of erroring at import time.
+
+The fallback deliberately runs fewer examples than hypothesis
+(``REPRO_COMPAT_EXAMPLES``, default 4) because every distinct shape
+triggers an XLA recompile; the full budget only pays off under real
+hypothesis where shrinking needs it.
+"""
+from __future__ import annotations
+
+import os
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = int(os.environ.get("REPRO_COMPAT_EXAMPLES", "2"))
+
+    class _Strategy:
+        def __init__(self, sample_fn, label):
+            self._sample = sample_fn
+            self._label = label
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+        def __repr__(self):
+            return f"_Strategy({self._label})"
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            lo, hi = int(min_value), int(max_value)
+
+            def sample(rng):
+                # bias toward the endpoints: boundary values find the
+                # off-by-one bugs that uniform draws usually miss
+                r = rng.random()
+                if r < 0.15:
+                    return lo
+                if r < 0.3:
+                    return hi
+                return rng.randint(lo, hi)
+
+            return _Strategy(sample, f"integers({lo}, {hi})")
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: rng.uniform(lo, hi), f"floats({lo}, {hi})")
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: rng.choice(elems), f"sampled_from({elems})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            n_examples = min(
+                getattr(fn, "_compat_max_examples", _FALLBACK_EXAMPLES),
+                _FALLBACK_EXAMPLES,
+            )
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for ex in range(n_examples):
+                    # deterministic per-test, per-example seed
+                    rng = random.Random(f"{fn.__name__}:{ex}")
+                    drawn = {k: s.sample(rng) for k, s in strategy_kw.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # noqa: BLE001 - re-raise with context
+                        raise AssertionError(
+                            f"falsifying example ({fn.__name__}, #{ex}): {drawn!r}"
+                        ) from e
+
+            # hide strategy-drawn params from pytest's fixture resolution:
+            # only the remaining (fixture) params stay in the signature
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items() if name not in strategy_kw]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            del wrapper.__wrapped__  # stop inspect from following to fn
+            return wrapper
+
+        return deco

@@ -14,7 +14,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _run(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}"
+        " --xla_backend_optimization_level=0"  # match conftest: compile-bound
+    )
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
@@ -25,6 +28,15 @@ def _run(code: str, devices: int = 8) -> str:
 
 
 def test_distributed_partition_sample_sort():
+    """Properties of `distributed_partition` through the fixed-capacity
+    all_to_all, on *clustered*, non-uniformly weighted input (the regime
+    that stresses the ~2x fair-share lane capacity):
+
+      1. element conservation — no silent drops at capacity
+      2. weight conservation — the global weight mass survives the exchange
+      3. non-decreasing global key order across shards
+      4. near-ideal weighted load balance from the knapsack slice
+    """
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -32,23 +44,75 @@ def test_distributed_partition_sample_sort():
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((8,), ('data',))
         rng = np.random.default_rng(0)
-        n = 16384
-        pts = jax.device_put(jnp.asarray(rng.random((n,3)), jnp.float32), NamedSharding(mesh, P('data')))
-        wts = jax.device_put(jnp.ones((n,), jnp.float32), NamedSharding(mesh, P('data')))
+        n = 4096
+        # half the mass in a tight cluster: many shards route to few lanes
+        pts_h = rng.random((n,3)).astype(np.float32)
+        pts_h[: n // 2] = 0.45 + 0.1 * pts_h[: n // 2]
+        wts_h = (0.1 + rng.random(n)).astype(np.float32)
+        pts = jax.device_put(jnp.asarray(pts_h), NamedSharding(mesh, P('data')))
+        wts = jax.device_put(jnp.asarray(wts_h), NamedSharding(mesh, P('data')))
         keys, w, part = pt.distributed_partition(mesh, 'data', pts, wts, num_parts=16)
-        keys_h, part_h = np.asarray(keys), np.asarray(part)
+        keys_h, w_h, part_h = np.asarray(keys), np.asarray(w), np.asarray(part)
         valid = part_h >= 0
-        assert valid.sum() == n, (valid.sum(), n)
+        assert valid.sum() == n, (valid.sum(), n)                    # (1)
+        np.testing.assert_allclose(                                  # (2)
+            w_h[valid].sum(), wts_h.sum(), rtol=1e-5)
         ks = keys_h.reshape(8, -1)
         prev = -1
         for s in range(8):
             kv = ks[s][ks[s] != 0xFFFFFFFF].astype(np.int64)
-            assert (np.diff(kv) >= 0).all()
+            assert (np.diff(kv) >= 0).all()                          # (3)
             if kv.size:
                 assert kv[0] >= prev
                 prev = kv[-1]
-        loads = np.bincount(part_h[valid], minlength=16)
-        assert loads.max() - loads.min() <= 2
+        loads = np.zeros(16); np.add.at(loads, part_h[valid], w_h[valid])
+        assert loads.max() / loads.mean() < 1.05                     # (4)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_distributed_reslice_matches_full_repartition():
+    """Weight-only rebalance on cached keys must produce the same slice as
+    a full re-partition with the new weights (and the engine must count it
+    as a reslice, not a key-gen)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import partitioner as pt
+        from repro.core.repartition import DistributedRepartitioner
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ('data',))
+        rng = np.random.default_rng(3)
+        n = 2048
+        sh = NamedSharding(mesh, P('data'))
+        pts = jax.device_put(jnp.asarray(rng.random((n,3)), jnp.float32), sh)
+        wts_h = (0.5 + rng.random(n)).astype(np.float32)
+        wts = jax.device_put(jnp.asarray(wts_h), sh)
+        eng = DistributedRepartitioner(mesh, 'data', num_parts=16)
+        keys, w_sorted, part0 = eng.partition(pts, wts)
+        # weight-only drift, applied in the cached sorted layout
+        w2 = jnp.where(w_sorted >= 0, w_sorted * (1.0 + 2.0 * (np.asarray(keys) % 7 == 0)), 0.0)
+        part1 = eng.rebalance(w2)
+        valid = np.asarray(w_sorted) >= 0
+        p1 = np.asarray(part1)
+        assert (p1[valid] >= 0).all() and (p1[~valid] == -1).all()
+        # exact oracle: the global curve order is unchanged, so the slice
+        # must equal the single-process knapsack over the valid weights
+        from repro.core import knapsack
+        w2_h = np.asarray(w2)
+        expect = np.asarray(knapsack.slice_weighted_curve(jnp.asarray(w2_h[valid]), 16))
+        # float32 prefix-sum association differs between the sharded and
+        # host scans: tolerate a +-1 part flip on a vanishing fraction of
+        # boundary elements, nothing else
+        mism = p1[valid] != expect
+        assert np.abs(p1[valid] - expect).max() <= 1
+        assert mism.mean() < 1e-2, mism.mean()
+        # conservation + balance of the resliced assignment
+        loads = np.zeros(16); np.add.at(loads, p1[valid], w2_h[valid])
+        assert abs(loads.sum() - w2_h[valid].sum()) < 1e-3 * max(loads.sum(), 1)
+        assert loads.max() / loads.mean() < 1.1
+        assert eng.reslices == 1 and eng.full_partitions == 1
         print('OK')
     """)
     assert "OK" in out
@@ -69,11 +133,21 @@ def test_shard_exchange_conserves():
         got = np.asarray(recv)[np.asarray(valid)]
         want_count = sum(min(int((np.asarray(dest).reshape(8,-1)[s]==d).sum()), 64) for s in range(8) for d in range(8))
         assert got.shape[0] == want_count
+
+        # apply_repartition: default capacity must never drop a row, and
+        # invalid rows (part < 0) must park on their current shard
+        from repro.distributed import sharding as shd
+        part = jnp.where(jnp.arange(n) % 11 == 0, -1, dest)
+        recv2, valid2 = shd.apply_repartition(mesh, 'data', payload, part)
+        got2 = np.asarray(recv2)[np.asarray(valid2)]
+        assert got2.shape[0] == n, (got2.shape[0], n)   # full conservation
+        assert sorted(got2[:, 0].astype(int).tolist()) == list(range(n))
         print('OK', got.shape[0])
     """)
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_train_step_sharded_small_mesh():
     """A real sharded train step executes (not just lowers) on 8 devices."""
     out = _run("""
@@ -109,6 +183,7 @@ def test_train_step_sharded_small_mesh():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_dryrun_entry_on_8_devices():
     """dryrun.build_cell_fn lowers+compiles a reduced cell on a small mesh
     (the full 512-device sweep runs out-of-band; results in EXPERIMENTS.md)."""
@@ -129,6 +204,8 @@ def test_dryrun_entry_on_8_devices():
             compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+            cost = cost[0]
         assert cost.get('flops', 0) > 0
         coll = dr.parse_collectives(compiled.as_text())
         print('OK flops', cost['flops'], 'coll', coll['total_bytes'])
@@ -136,6 +213,7 @@ def test_dryrun_entry_on_8_devices():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_restore_to_different_mesh(tmp_path):
     out = _run(f"""
         import numpy as np, jax, jax.numpy as jnp

@@ -2,32 +2,42 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import kdtree
 
-SPLITTERS = ["midpoint", "median", "median_sampled", "median_selection"]
+# tier-1 covers midpoint + exact median; the sampling/selection median
+# variants ride the slow tier (same code path, heavier compiles)
+# tier-1 keeps midpoint fast (median coverage via the hybrid-policy
+# test); all pure-median variants ride the slow tier
+SPLITTERS = [
+    "midpoint",
+    pytest.param("median", marks=pytest.mark.slow),
+    pytest.param("median_sampled", marks=pytest.mark.slow),
+    pytest.param("median_selection", marks=pytest.mark.slow),
+]
 
 
 @pytest.mark.parametrize("splitter", SPLITTERS)
 def test_build_invariants_uniform(splitter, rng):
-    pts = jnp.asarray(rng.random((4000, 3)), jnp.float32)
+    pts = jnp.asarray(rng.random((1500, 3)), jnp.float32)
     tr = kdtree.build(pts, max_depth=10, bucket_size=32, splitter=splitter)
     rep = kdtree.validate(tr, pts)
     assert rep["ok"], rep["problems"]
-    assert int(tr.count[0]) == 4000  # root holds everything
+    assert int(tr.count[0]) == 1500  # root holds everything
 
 
-@pytest.mark.parametrize("splitter", ["midpoint", "median"])
+@pytest.mark.parametrize("splitter", ["midpoint", pytest.param("median", marks=pytest.mark.slow)])
 def test_build_invariants_clustered(splitter, rng):
     clu = np.concatenate(
-        [rng.normal(0.1, 0.01, (3000, 3)), rng.random((1000, 3))]
+        [rng.normal(0.1, 0.01, (1000, 3)), rng.random((500, 3))]
     ).astype(np.float32)
     tr = kdtree.build(jnp.asarray(clu), max_depth=12, bucket_size=32, splitter=splitter)
     rep = kdtree.validate(tr, jnp.asarray(clu))
     assert rep["ok"], rep["problems"]
 
 
+@pytest.mark.slow  # depth-14 median builds dominate compile time
 def test_median_shorter_trees_on_clusters(rng):
     """Paper: 'For clustered distributions, median splitters produced
     shorter trees'."""
@@ -50,7 +60,7 @@ def test_weighted_counts(rng):
 
 
 def test_hybrid_splitter_policy(rng):
-    pts = jnp.asarray(rng.random((2000, 3)), jnp.float32)
+    pts = jnp.asarray(rng.random((1024, 3)), jnp.float32)
     tr = kdtree.build(
         pts, max_depth=10, bucket_size=32, splitter="median", median_top_levels=3
     )
@@ -73,7 +83,7 @@ def test_property_membership_and_occupancy(n, d, b, seed):
 
 
 def test_tree_order_is_permutation(rng):
-    pts = jnp.asarray(rng.random((3000, 3)), jnp.float32)
+    pts = jnp.asarray(rng.random((1500, 3)), jnp.float32)
     tr = kdtree.build(pts, max_depth=10, bucket_size=32)
     perm, _ = kdtree.tree_order(tr, pts)
-    assert len(np.unique(np.asarray(perm))) == 3000
+    assert len(np.unique(np.asarray(perm))) == 1500

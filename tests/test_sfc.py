@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import sfc
 
@@ -28,7 +28,10 @@ def test_hilbert_continuity_2d():
     assert (jumps == 1).all(), f"max jump {jumps.max()}"
 
 
-@pytest.mark.parametrize("d", [2, 3, 5, 10])
+@pytest.mark.parametrize(
+    "d",
+    [2, pytest.param(3, marks=pytest.mark.slow), pytest.param(5, marks=pytest.mark.slow), 10],
+)
 def test_hilbert_beats_morton_locality(d, rng):
     pts = jnp.asarray(rng.random((4096, d)), jnp.float32)
     pm, _ = sfc.sfc_order(pts, curve="morton")
