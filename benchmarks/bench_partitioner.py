@@ -134,7 +134,7 @@ def bench_queries() -> list[tuple]:
         pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
         idx = queries.build_index(pts, bucket_size=32)
         q = pts[jnp.asarray(rng.choice(n, 50_000, replace=False))]
-        us, (found, _) = _timeit(lambda qq: queries.point_location(idx, qq), q)
+        us, (found, _, _) = _timeit(lambda qq: queries.point_location(idx, qq), q)
         rows.append(
             (f"point_location/n={n}/q=1e5", us, f"found={float(found.mean()):.4f}")
         )

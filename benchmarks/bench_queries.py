@@ -1,0 +1,128 @@
+"""Query-serving benchmark: batched point-location / kNN throughput and
+incremental index refresh vs cold build (paper §V-A economics).
+
+Two claims measured on the same inputs:
+
+* **Serving throughput** — batched exact point location and kNN through
+  the `DistributedQueryEngine` (local path by default; set
+  REPRO_BENCH_DIST=1 for the 8-fake-device sharded path with all_to_all
+  query routing).
+* **Refresh vs cold** — after a weight-only repartition step the engine's
+  `curve_index()` refresh reuses cached keys + order (directory re-carve
+  only) and must be >=5x cheaper than a cold `queries.build_index`
+  (key-gen + sort + carve). Also reported: the memoized-hit cost (what a
+  serving layer actually pays when nothing changed) and the refresh after
+  a delta insert (re-carve over the re-sorted cached keys).
+
+    PYTHONPATH=src python benchmarks/bench_queries.py [n] [q] [--smoke]
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitioner as pt
+from repro.core import queries
+from repro.core.repartition import Repartitioner
+from repro.serve.query_engine import DistributedQueryEngine
+
+SMOKE = "--smoke" in sys.argv
+argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+N = int(argv[0]) if len(argv) > 0 else (20_000 if SMOKE else 200_000)
+Q = int(argv[1]) if len(argv) > 1 else (2_048 if SMOKE else 16_384)
+PARTS = 16
+CFG = pt.PartitionerConfig(curve="morton")
+MIN_REFRESH_SPEEDUP = 5.0
+
+
+def timed(fn, *args, warmup=1, reps=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main():
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.random((N, 3)), jnp.float32)
+    wts = jnp.asarray(0.5 + rng.random(N), jnp.float32)
+    sel = rng.choice(N, Q, replace=True)
+    q_hit = pts[jnp.asarray(sel)]
+    q_rand = jnp.asarray(rng.random((Q, 3)), jnp.float32)
+
+    extra_n = max(Q // 16, 1)
+    rp = Repartitioner(pts, wts, PARTS, CFG, capacity=N + extra_n, max_depth=10)
+    print(f"n={N} q={Q} parts={PARTS} curve={CFG.curve} "
+          f"dist={os.environ.get('REPRO_BENCH_DIST', '0')}")
+
+    # --- serving throughput ------------------------------------------------
+    mesh = None
+    if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and len(jax.devices()) >= 8:
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+    eng = DistributedQueryEngine(rp.curve_index(), mesh, "data")
+
+    t_pl = timed(lambda: eng.point_location(q_hit))
+    t_knn = timed(lambda: eng.knn(q_rand, 3))
+    label = "8-shard all_to_all" if mesh is not None else "local"
+    print(f"point_location ({label:18s}): {t_pl*1e3:8.2f} ms/batch  "
+          f"{Q/t_pl/1e6:8.2f} Mq/s")
+    print(f"knn k=3        ({label:18s}): {t_knn*1e3:8.2f} ms/batch  "
+          f"{Q/t_knn/1e6:8.2f} Mq/s")
+
+    # --- incremental refresh vs cold build ---------------------------------
+    def cold():
+        idx = queries.build_index(pts, bucket_size=32)
+        return idx.keys
+
+    t_cold = timed(cold)
+
+    # weight-only repartition step: cached keys/order untouched
+    rp.update_weights(jnp.asarray(0.5 + rng.random(N), jnp.float32))
+    rp.rebalance()
+
+    def refresh():
+        rp._index_cache = None  # force the real from_sorted work
+        return rp.curve_index().keys
+
+    t_refresh = timed(refresh)
+    t_hit = timed(lambda: rp.curve_index().keys)  # memoized: the steady state
+
+    # delta insert: key-gen for the batch only, then re-carve
+    extra = jnp.asarray(rng.random((extra_n, 3)), jnp.float32)
+
+    def insert_refresh():
+        slots = rp.insert(extra, jnp.ones(extra.shape[0]))
+        keys = rp.curve_index().keys
+        rp.delete(slots)  # restore for the next rep
+        return keys
+
+    t_ins = timed(insert_refresh, warmup=1, reps=1)
+
+    speedup = t_cold / max(t_refresh, 1e-9)
+    print(f"cold build_index            : {t_cold*1e3:8.2f} ms")
+    print(f"refresh (weight-only step)  : {t_refresh*1e3:8.2f} ms   {speedup:6.1f}x")
+    print(f"refresh (memoized hit)      : {t_hit*1e6:8.2f} us")
+    print(f"insert {extra.shape[0]:6d} + refresh     : {t_ins*1e3:8.2f} ms")
+
+    if speedup < MIN_REFRESH_SPEEDUP:
+        print(f"WARNING: refresh speedup {speedup:.1f}x "
+              f"< required {MIN_REFRESH_SPEEDUP}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,8 +29,10 @@ import jax.numpy as jnp
 from repro.core import partitioner as pt
 from repro.core.repartition import Repartitioner
 
-N = int(sys.argv[1]) if len(sys.argv) > 1 else 200_000
-STEPS = int(sys.argv[2]) if len(sys.argv) > 2 else 10
+SMOKE = "--smoke" in sys.argv
+_argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+N = int(_argv[0]) if len(_argv) > 0 else (20_000 if SMOKE else 200_000)
+STEPS = int(_argv[1]) if len(_argv) > 1 else (4 if SMOKE else 10)
 PARTS = 16
 CFG = pt.PartitionerConfig(curve="hilbert")
 

@@ -1,5 +1,6 @@
 """Core library: the paper's geometric partitioner as composable JAX modules."""
 from repro.core import (  # noqa: F401
+    curve_index,
     dynamic,
     kdtree,
     knapsack,
@@ -11,12 +12,14 @@ from repro.core import (  # noqa: F401
     sfc,
     spmv,
 )
+from repro.core.curve_index import CurveIndex  # noqa: F401
 from repro.core.partitioner import (  # noqa: F401
     PartitionerConfig,
     PartitionResult,
     distributed_partition,
     distributed_reslice,
     partition,
+    partition_with_index,
 )
 from repro.core.repartition import (  # noqa: F401
     DistributedRepartitioner,

@@ -1,0 +1,278 @@
+"""Unified versioned curve index (paper §V-A, the 'sorted list of buckets').
+
+One structure, three consumers. Before this module, the SFC key/bucket
+machinery existed in three private copies: ``queries.QueryIndex`` rebuilt
+keys and a bucket table from scratch, ``repartition.Repartitioner`` kept
+its own cached keys + frozen quantization frame, and the partitioner
+expressed slice boundaries against yet another sorted order. A
+``CurveIndex`` is the single source of truth they now share:
+
+* **keys** — the sorted SFC keys (uint32, sentinel ``0xFFFFFFFF`` tail
+  for inactive storage slots when built from an engine).
+* **bucket directory** — equal-count bucket starts + first-key-per-bucket,
+  the binary-search target of point location.
+* **quantization frame** — the (lo, hi) box queries are keyed against.
+  Frozen at build/refresh time; identical to the owner's frame so cached
+  point keys and fresh query keys live on the same curve.
+
+Versioning: ``version`` is bumped by the owner on every refresh (geometry
+change, migration, rebuild) and ``token`` ties the index to the
+``repro.kernels.ops`` key cache. Both are *data* fields (traced scalars),
+not pytree metadata — a version bump must not retrace jitted query
+functions. Consumers holding an index compare ``int(index.version)``
+against the owner's live version to decide whether to swap.
+
+Construction paths:
+
+* :func:`build` — cold: key-gen + sort + carve (what a fresh serving
+  replica pays).
+* :func:`from_sorted` — incremental refresh: wrap already-sorted arrays
+  (an engine's cached keys/order) and carve the directory only. No
+  key generation, no sort — this is why a refresh after a weight-only
+  repartition step is an order of magnitude cheaper than :func:`build`.
+* :func:`from_partition` — reuse a ``PartitionResult``'s keys and
+  permutation; the partition's slice boundaries can then be expressed
+  against the directory with :func:`bucket_parts`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sfc as _sfc
+
+KEY_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "points",
+        "ids",
+        "keys",
+        "bucket_starts",
+        "bucket_keys",
+        "frame_lo",
+        "frame_hi",
+        "version",
+        "token",
+    ),
+    meta_fields=("bits", "curve", "max_bucket_len"),
+)
+@dataclasses.dataclass(frozen=True)
+class CurveIndex:
+    """SFC-sorted point store + bucket directory + quantization frame."""
+
+    points: jax.Array         # (n, d) in curve order (tail slots may be stale)
+    ids: jax.Array            # (n,) global/storage-slot id per sorted position
+    keys: jax.Array           # (n,) uint32 sorted SFC keys (sentinel tail)
+    bucket_starts: jax.Array  # (B+1,) start offset per bucket; [-1] == n_valid
+    bucket_keys: jax.Array    # (B,) first key of each bucket (sorted)
+    frame_lo: jax.Array       # (d,) quantization frame
+    frame_hi: jax.Array       # (d,)
+    version: jax.Array        # () int32 — bumped by the owner per refresh
+    token: jax.Array          # () int32 — kernels.ops key-cache token (-1: none)
+    bits: int
+    curve: str                # "morton" | "hilbert"
+    max_bucket_len: int       # static max bucket extent (query window sizing)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.bucket_keys.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.points.shape[0]
+
+    def valid_count(self) -> jax.Array:
+        """Number of live (non-sentinel) entries, as a device scalar."""
+        return self.bucket_starts[-1]
+
+
+def _carve(n_valid: int, bucket_size: int) -> tuple[np.ndarray, int]:
+    """Equal-count bucket starts over the live prefix (host-side).
+
+    Returns (starts incl. final n_valid, max bucket extent). int64
+    intermediate: ``arange(nb) * n`` overflows int32 beyond ~430k points.
+    """
+    nb = max(1, int(n_valid) // max(1, bucket_size))
+    starts = (np.arange(nb + 1, dtype=np.int64) * int(n_valid)) // nb
+    max_len = int(np.diff(starts).max()) if n_valid else 1
+    return starts.astype(np.int32), max(1, max_len)
+
+
+def from_sorted(
+    points_sorted: jax.Array,
+    ids_sorted: jax.Array,
+    keys_sorted: jax.Array,
+    *,
+    n_valid: int,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+    curve: str = "morton",
+    bucket_size: int = 32,
+    version: int = 0,
+    token: int = -1,
+) -> CurveIndex:
+    """Incremental-refresh constructor: carve the directory over arrays
+    already in curve order. No key generation, no sort."""
+    assert keys_sorted.ndim == 1, "CurveIndex requires single-word keys"
+    starts, max_len = _carve(n_valid, bucket_size)
+    starts_d = jnp.asarray(starts)
+    bucket_keys = keys_sorted[starts_d[:-1]]
+    return CurveIndex(
+        points=points_sorted,
+        ids=ids_sorted,
+        keys=keys_sorted,
+        bucket_starts=starts_d,
+        bucket_keys=bucket_keys,
+        frame_lo=jnp.asarray(frame_lo, jnp.float32),
+        frame_hi=jnp.asarray(frame_hi, jnp.float32),
+        version=jnp.asarray(version, jnp.int32),
+        token=jnp.asarray(token, jnp.int32),
+        bits=int(bits),
+        curve=curve,
+        max_bucket_len=max_len,
+    )
+
+
+def build(
+    points: jax.Array,
+    ids: jax.Array | None = None,
+    *,
+    bucket_size: int = 32,
+    bits: int | None = None,
+    curve: str = "morton",
+    frame: tuple[jax.Array, jax.Array] | None = None,
+    version: int = 0,
+    token: int | None = None,
+    use_pallas: bool = False,
+) -> CurveIndex:
+    """Cold build: key-gen + sort + carve.
+
+    ``frame`` quantizes against a fixed box (an engine's frozen frame);
+    default is the data's own bounding box. ``token`` routes key-gen
+    through the ``kernels.ops`` token cache — pass it only when you own
+    the token's invalidation (never share token 0 across point sets).
+    """
+    n, d = points.shape
+    if ids is None:
+        ids = jnp.arange(n, dtype=jnp.int32)
+    if bits is None:
+        bits = _sfc.max_bits_per_dim(d)
+    if frame is None:
+        lo = jnp.min(points, axis=0)
+        hi = jnp.max(points, axis=0)
+    else:
+        lo, hi = frame
+    if token is not None:
+        from repro.kernels import ops as _kops
+
+        keys = _kops.cached_sfc_key(
+            points, token=token, curve=curve, bits=bits,
+            use_pallas=use_pallas, lo=lo, hi=hi,
+        )
+    else:
+        keys = keys_in_frame(points, lo, hi, bits=bits, curve=curve)
+    order = jnp.argsort(keys, stable=True)
+    return from_sorted(
+        points[order],
+        ids[order],
+        keys[order],
+        n_valid=n,
+        frame_lo=lo,
+        frame_hi=hi,
+        bits=bits,
+        curve=curve,
+        bucket_size=bucket_size,
+        version=version,
+        token=-1 if token is None else token,
+    )
+
+
+def from_partition(
+    points: jax.Array,
+    perm: jax.Array,
+    keys: jax.Array,
+    *,
+    curve: str = "morton",
+    bits: int | None = None,
+    bucket_size: int = 32,
+    version: int = 0,
+) -> CurveIndex:
+    """Wrap a ``PartitionResult``'s keys + permutation — the partitioner
+    and the query layer then share one key array and one sorted order.
+
+    Only geometric-stats keys are addressable by query coordinates (rank
+    stats re-key by data order; a query point has no rank) — callers must
+    pass keys produced with ``stats='geometric'``.
+    """
+    assert keys.ndim == 1, "CurveIndex requires single-word keys"
+    if bits is None:
+        bits = _sfc.max_bits_per_dim(points.shape[1])
+    lo = jnp.min(points, axis=0)
+    hi = jnp.max(points, axis=0)
+    return from_sorted(
+        points[perm],
+        perm.astype(jnp.int32),
+        keys[perm],
+        n_valid=points.shape[0],
+        frame_lo=lo,
+        frame_hi=hi,
+        bits=bits,
+        curve=curve,
+        bucket_size=bucket_size,
+        version=version,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Keying queries onto the index's curve
+# ---------------------------------------------------------------------------
+
+def keys_in_frame(
+    pts: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    bits: int,
+    curve: str = "morton",
+) -> jax.Array:
+    """SFC keys against a fixed quantization frame (points clipped into
+    the boundary cells — same convention as the repartitioning engine)."""
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    unit = jnp.clip((pts - lo) / span, 0.0, 1.0 - 1e-7)
+    cells = (unit * (2**bits)).astype(jnp.uint32)
+    if curve == "morton":
+        return _sfc.morton_key_from_cells(cells, bits)
+    return _sfc.hilbert_key_from_cells(cells, bits)
+
+
+def query_keys(index: CurveIndex, queries: jax.Array) -> jax.Array:
+    """Key a query batch onto the index's curve (frame + curve + bits)."""
+    return keys_in_frame(
+        queries, index.frame_lo, index.frame_hi, bits=index.bits, curve=index.curve
+    )
+
+
+# ---------------------------------------------------------------------------
+# Slice boundaries against the directory
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def bucket_parts(index: CurveIndex, boundaries: jax.Array) -> jax.Array:
+    """Part id owning each directory bucket.
+
+    ``boundaries`` is the knapsack slice (P+1 starts into the sorted
+    order, as in ``PartitionResult.boundaries``). Bucket b belongs to the
+    part whose slice contains its first element — the directory and the
+    partition live on the same curve, so this is a single searchsorted.
+    """
+    num_parts = boundaries.shape[0] - 1
+    p = jnp.searchsorted(boundaries[1:], index.bucket_starts[:-1], side="right")
+    return jnp.clip(p, 0, num_parts - 1).astype(jnp.int32)

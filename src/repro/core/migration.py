@@ -135,6 +135,37 @@ def execute_shard_exchange(
     return _exchange_fn(mesh, axis, capacity, fill_value)(payload, dest)
 
 
+def stage_rows_by_dest(
+    dest: jax.Array,
+    payloads: tuple,
+    nshards: int,
+    capacity: int,
+    fills: tuple,
+) -> list:
+    """Stage local rows into fixed-capacity (nshards, capacity, ...) lane
+    buffers by destination shard — the shared body of every padded
+    all_to_all exchange (payload migration, query routing). Must be
+    called inside shard_map; rows beyond a lane's capacity are dropped
+    (callers size capacity so that cannot happen, or assert conservation).
+
+    Returns (staged buffers, one per payload; per-ORIGINAL-row staging
+    position). Row i went to buffer slot [dest[i], pos[i]] — a caller
+    exchanging answers back can therefore gather its own results locally
+    from the reply buffer instead of round-tripping slot ids."""
+    n_loc = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    pos = jnp.arange(n_loc, dtype=jnp.int32) - jnp.searchsorted(
+        ds, jnp.arange(nshards, dtype=ds.dtype)
+    ).astype(jnp.int32)[ds]
+    out = []
+    for x, fill in zip(payloads, fills):
+        buf = jnp.full((nshards, capacity) + x.shape[1:], fill, x.dtype)
+        out.append(buf.at[ds, pos].set(x[order], mode="drop"))
+    pos_of_row = jnp.zeros((n_loc,), jnp.int32).at[order].set(pos)
+    return out, pos_of_row
+
+
 @functools.lru_cache(maxsize=64)
 def _exchange_fn(mesh: jax.sharding.Mesh, axis: str, capacity: int, fill_value):
     """Jitted exchange executor, memoized per static config. shard_map'd
@@ -145,16 +176,9 @@ def _exchange_fn(mesh: jax.sharding.Mesh, axis: str, capacity: int, fill_value):
     nshards = mesh.shape[axis]
 
     def kernel(x, d):
-        n_loc = x.shape[0]
-        order = jnp.argsort(d, stable=True)
-        xs, ds = x[order], d[order]
-        pos = jnp.arange(n_loc) - jnp.searchsorted(
-            ds, jnp.arange(nshards, dtype=ds.dtype)
-        )[ds]
-        buf = jnp.full((nshards, capacity) + x.shape[1:], fill_value, x.dtype)
-        val = jnp.zeros((nshards, capacity), dtype=bool)
-        buf = buf.at[ds, pos].set(xs, mode="drop")
-        val = val.at[ds, pos].set(True, mode="drop")
+        (buf, val), _ = stage_rows_by_dest(
+            d, (x, jnp.ones(d.shape, bool)), nshards, capacity, (fill_value, False)
+        )
         rbuf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0)
         rval = jax.lax.all_to_all(val, axis, split_axis=0, concat_axis=0)
         return rbuf.reshape((-1,) + x.shape[1:]), rval.reshape(-1)

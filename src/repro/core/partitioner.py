@@ -102,6 +102,40 @@ def partition(
     return PartitionResult(perm=perm, part=part, keys=keys, boundaries=boundaries, loads=loads)
 
 
+def partition_with_index(
+    points: jax.Array,
+    weights: jax.Array | None = None,
+    num_parts: int = 8,
+    cfg: PartitionerConfig = PartitionerConfig(),
+    *,
+    bucket_size: int = 32,
+) -> tuple[PartitionResult, "object"]:
+    """Partition and build the query-serving ``CurveIndex`` from ONE key
+    generation: the index wraps the partition's keys and permutation, and
+    ``result.boundaries`` indexes the same sorted order the index holds —
+    ``curve_index.bucket_parts(index, result.boundaries)`` maps each
+    directory bucket to its owning part.
+
+    Returns (PartitionResult, CurveIndex). Restricted to the
+    configurations whose keys are addressable by query coordinates:
+    geometric stats (rank re-keys by data order — a query point has no
+    rank), single-word keys, closed-form ordering.
+    """
+    from repro.core import curve_index as _ci
+
+    if cfg.stats != "geometric" or cfg.words != 1 or cfg.use_tree:
+        raise ValueError(
+            "partition_with_index requires stats='geometric', words=1, "
+            "use_tree=False (keys must be query-addressable)"
+        )
+    res = partition(points, weights, num_parts, cfg)
+    bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
+    index = _ci.from_partition(
+        points, res.perm, res.keys, curve=cfg.curve, bits=bits, bucket_size=bucket_size
+    )
+    return res, index
+
+
 # ---------------------------------------------------------------------------
 # Distributed partition (shard_map sample-sort + global knapsack)
 # ---------------------------------------------------------------------------

@@ -1,47 +1,42 @@
 """Parallel query processing on SFC-partitioned point data (paper §V-A).
 
 * Exact point location — queries are keyed by bit-interleaving their
-  coordinates and binary-searched against the sorted bucket boundaries;
-  a final in-bucket scan finds the exact match. O(log N_buckets) per
-  query, vectorized over the whole query batch.
+  coordinates and binary-searched against the sorted keys; an in-run scan
+  finds the exact match. O(log N) per query, vectorized over the batch.
 * k-nearest neighbors — locate the query's bucket, then search the
   CUTOFF-neighborhood of buckets along the curve (the paper restricts
   CUTOFF to one bucket before/after) and select the k smallest distances.
 
-Both run against a ``QueryIndex`` built from the partitioner output and
-both have Pallas fast paths (``repro.kernels.bucket_search``) for the key
-search — the innermost hot loop.
+Both run against a shared :class:`repro.core.curve_index.CurveIndex`
+(built cold here, or refreshed incrementally from a ``Repartitioner``'s
+cached keys) and both route the key search through the Pallas
+``bucket_search`` kernel when compiled kernels are enabled
+(``REPRO_PALLAS_COMPILE=1`` / ``kernels.ops.set_interpret(False)``),
+falling back to ``jnp.searchsorted`` in interpret mode where the pure-jnp
+path is the faster one.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sfc as _sfc
+from repro.core import curve_index as _ci
+
+# The index type is shared with the repartitioning engine and the
+# partitioner; ``QueryIndex`` remains as a compatibility alias.
+CurveIndex = _ci.CurveIndex
+QueryIndex = _ci.CurveIndex
 
 
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=("points", "ids", "keys", "bucket_starts", "bucket_keys", "bbox_lo", "bbox_hi"),
-    meta_fields=("bits",),
-)
-@dataclasses.dataclass(frozen=True)
-class QueryIndex:
-    """SFC-sorted point store with bucket directory (the paper's
-    'sorted list of buckets' for fast point location)."""
+def _pallas_default() -> bool:
+    """Pallas fast path by default only when kernels compile natively
+    (on CPU/interpret mode jnp.searchsorted wins)."""
+    from repro.kernels import ops as _kops
 
-    points: jax.Array         # (n, d) in SFC order
-    ids: jax.Array            # (n,) original global ids
-    keys: jax.Array           # (n,) uint32 SFC key per point (sorted)
-    bucket_starts: jax.Array  # (B+1,) start offset of each bucket
-    bucket_keys: jax.Array    # (B,) first key in each bucket (sorted)
-    bbox_lo: jax.Array        # (d,)
-    bbox_hi: jax.Array        # (d,)
-    bits: int
+    return not _kops.INTERPRET
 
 
 def build_index(
@@ -50,115 +45,177 @@ def build_index(
     *,
     bucket_size: int = 32,
     bits: int | None = None,
-) -> QueryIndex:
-    """Pre-sort points by Morton key and carve equal-count buckets.
+) -> CurveIndex:
+    """Cold-build a query index: Morton key-gen + sort + bucket carve.
 
     Uses Morton (the paper's point-location fast path works 'only with
     Morton SFC': key search needs key order == curve order, which the
-    closed-form Morton keys give directly).
+    closed-form Morton keys give directly). Incremental consumers should
+    prefer ``Repartitioner.curve_index()``, which reuses cached keys.
     """
-    n, d = points.shape
-    if ids is None:
-        ids = jnp.arange(n, dtype=jnp.int32)
-    if bits is None:
-        bits = _sfc.max_bits_per_dim(d)
-    lo = jnp.min(points, axis=0)
-    hi = jnp.max(points, axis=0)
-    keys = _sfc.morton_key(points, bits)
-    order = jnp.argsort(keys, stable=True)
-    pts_s, ids_s, keys_s = points[order], ids[order], keys[order]
-    nb = max(1, n // bucket_size)
-    # host-side int64: arange(nb)*n overflows int32 beyond ~430k points
-    import numpy as _np
-
-    starts = jnp.asarray(
-        (_np.arange(nb, dtype=_np.int64) * n) // nb, dtype=jnp.int32
-    )
-    bucket_keys = keys_s[starts]
-    starts_full = jnp.concatenate([starts, jnp.array([n], dtype=jnp.int32)])
-    return QueryIndex(
-        points=pts_s,
-        ids=ids_s,
-        keys=keys_s,
-        bucket_starts=starts_full,
-        bucket_keys=bucket_keys,
-        bbox_lo=lo,
-        bbox_hi=hi,
-        bits=bits,
-    )
+    return _ci.build(points, ids, bucket_size=bucket_size, bits=bits, curve="morton")
 
 
-def _query_keys(index: QueryIndex, queries: jax.Array) -> jax.Array:
-    span = jnp.where(index.bbox_hi > index.bbox_lo, index.bbox_hi - index.bbox_lo, 1.0)
-    unit = jnp.clip((queries - index.bbox_lo) / span, 0.0, 1.0 - 1e-7)
-    cells = (unit * (2**index.bits)).astype(jnp.uint32)
-    return _sfc.morton_key_from_cells(cells, index.bits)
+def _searchsorted_u32(
+    sorted_keys: jax.Array, qk: jax.Array, side: str, use_pallas: bool
+) -> jax.Array:
+    """searchsorted over sorted uint32 keys, routed through the Pallas
+    ``bucket_search`` kernel (last-boundary<=key probe) when enabled.
 
-
-@jax.jit
-def locate_bucket(index: QueryIndex, queries: jax.Array) -> jax.Array:
-    """Bucket id per query via binary search on sorted bucket keys."""
-    qk = _query_keys(index, queries)
-    b = jnp.searchsorted(index.bucket_keys, qk, side="right") - 1
-    return jnp.clip(b, 0, index.bucket_keys.shape[0] - 1)
-
-
-@functools.partial(jax.jit, static_argnames=("bucket_cap",))
-def point_location(
-    index: QueryIndex, queries: jax.Array, *, bucket_cap: int = 64
-) -> tuple[jax.Array, jax.Array]:
-    """Exact point location. Returns (found_mask, global_id or -1).
-
-    Vectorized: binary search to the bucket, then scan up to ``bucket_cap``
-    candidate slots for an exact coordinate match.
+    Exact for integer keys: right(q) = last_le(q)+1 (0 when q < keys[0]);
+    left(q) = right(q-1) for q > 0, else 0.
     """
-    b = locate_bucket(index, queries)
-    start = index.bucket_starts[b]
-    n = index.points.shape[0]
-    # gather bucket_cap candidates per query (clipped at the end)
+    from repro.kernels import bucket_search as _bsk
+    from repro.kernels import ops as _kops
+
+    if not use_pallas or sorted_keys.shape[0] > _bsk.DIR_MAX:
+        return jnp.searchsorted(sorted_keys, qk, side=side).astype(jnp.int32)
+    if side == "right":
+        last_le = _kops.bucket_search(qk, sorted_keys)
+        return jnp.where(sorted_keys[0] <= qk, last_le + 1, 0).astype(jnp.int32)
+    qm = qk - jnp.uint32(1)
+    last_lt = _kops.bucket_search(qm, sorted_keys)
+    cnt = jnp.where(sorted_keys[0] <= qm, last_lt + 1, 0)
+    return jnp.where(qk > jnp.uint32(0), cnt, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _locate_bucket(index: CurveIndex, queries: jax.Array, use_pallas: bool) -> jax.Array:
+    from repro.kernels import bucket_search as _bsk
+
+    if use_pallas and index.curve == "morton" and index.num_buckets <= _bsk.DIR_MAX:
+        from repro.kernels import ops as _kops
+
+        # fused key-gen + directory search in one kernel dispatch (beyond
+        # DIR_MAX the directory doesn't fit VMEM: degrade to the exact
+        # jnp path below rather than assert)
+        return _kops.fused_locate(
+            queries, index.bucket_keys, index.frame_lo, index.frame_hi, index.bits
+        )
+    qk = _ci.query_keys(index, queries)
+    b = _searchsorted_u32(index.bucket_keys, qk, "right", use_pallas) - 1
+    return jnp.clip(b, 0, index.num_buckets - 1)
+
+
+def locate_bucket(
+    index: CurveIndex, queries: jax.Array, *, use_pallas: bool | None = None
+) -> jax.Array:
+    """Bucket id per query via binary search on the sorted directory."""
+    if use_pallas is None:
+        use_pallas = _pallas_default()
+    return _locate_bucket(index, queries, use_pallas)
+
+
+class PointLocation(NamedTuple):
+    found: jax.Array  # (q,) bool — exact coordinate match located
+    ids: jax.Array    # (q,) int32 global/slot id, -1 when not found
+    ok: jax.Array     # (q,) bool — False iff the key-equal run exceeded
+    #                   bucket_cap without a hit, i.e. the miss is not
+    #                   certified (raise bucket_cap to resolve)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_cap", "use_pallas"))
+def _point_location(
+    index: CurveIndex, queries: jax.Array, bucket_cap: int, use_pallas: bool
+) -> PointLocation:
+    qk = _ci.query_keys(index, queries)
+    # Exact extent of the key-equal run in the sorted key array. Equal
+    # coordinates imply equal keys, so every possible match lies in
+    # [lo_i, hi_i) — unlike a single-bucket scan, this cannot silently
+    # miss when duplicates spill a bucket (runs spanning bucket or even
+    # partition boundaries are covered).
+    lo_i = _searchsorted_u32(index.keys, qk, "left", use_pallas)
+    hi_i = _searchsorted_u32(index.keys, qk, "right", use_pallas)
+    run = hi_i - lo_i
+    n = index.capacity
     offs = jnp.arange(bucket_cap, dtype=jnp.int32)
-    cand = jnp.minimum(start[:, None] + offs[None, :], n - 1)  # (q, cap)
-    cpts = index.points[cand]                                   # (q, cap, d)
-    eq = jnp.all(cpts == queries[:, None, :], axis=-1)          # (q, cap)
-    within = (start[:, None] + offs[None, :]) < index.bucket_starts[jnp.minimum(b + 1, index.bucket_keys.shape[0])][:, None]
-    hit = eq & within
+    pos = lo_i[:, None] + offs[None, :]
+    cand = jnp.clip(pos, 0, n - 1)                              # (q, cap)
+    cpts = index.points[cand]                                    # (q, cap, d)
+    hit = jnp.all(cpts == queries[:, None, :], axis=-1) & (pos < hi_i[:, None])
     found = jnp.any(hit, axis=1)
     slot = jnp.argmax(hit, axis=1)
-    gid = index.ids[cand[jnp.arange(queries.shape[0]), slot]]
-    return found, jnp.where(found, gid, -1)
+    gid = index.ids[cand[jnp.arange(queries.shape[0]), slot]].astype(jnp.int32)
+    ok = found | (run <= bucket_cap)
+    return PointLocation(found, jnp.where(found, gid, -1), ok)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "cutoff_buckets", "bucket_cap"))
-def knn(
-    index: QueryIndex,
+def point_location(
+    index: CurveIndex,
     queries: jax.Array,
     *,
-    k: int = 3,
-    cutoff_buckets: int = 1,
     bucket_cap: int = 64,
-) -> tuple[jax.Array, jax.Array]:
-    """Approximate k-NN: search the query's bucket ± cutoff_buckets along
-    the curve (paper: 'CUTOFF restricted to one bucket before and after').
+    use_pallas: bool | None = None,
+) -> PointLocation:
+    """Exact point location: (found, id or -1, ok).
 
-    Returns (distances (q, k), global ids (q, k)).
+    ``ok[i]`` is False only when query i missed *and* more than
+    ``bucket_cap`` stored points share its SFC key (duplicate-heavy
+    distributions) — the scan window was exhausted, so the miss is not a
+    certificate of absence.
     """
-    nb = index.bucket_keys.shape[0]
-    n = index.points.shape[0]
-    b = locate_bucket(index, queries)
+    if use_pallas is None:
+        use_pallas = _pallas_default()
+    return _point_location(index, queries, bucket_cap, use_pallas)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "cutoff_buckets", "use_pallas", "max_window")
+)
+def _knn(
+    index: CurveIndex,
+    queries: jax.Array,
+    k: int,
+    cutoff_buckets: int,
+    use_pallas: bool,
+    max_window: int,
+) -> tuple[jax.Array, jax.Array]:
+    nb = index.num_buckets
+    n = index.capacity
+    b = _locate_bucket(index, queries, use_pallas)
     b0 = jnp.clip(b - cutoff_buckets, 0, nb - 1)
     b1 = jnp.clip(b + cutoff_buckets, 0, nb - 1)
     start = index.bucket_starts[b0]
     end = index.bucket_starts[b1 + 1]
-    win = bucket_cap * (2 * cutoff_buckets + 1)
+    # Candidate window sized from the directory's true maximum bucket
+    # extent (static metadata) — a fixed per-bucket cap undercovers
+    # whenever carving produces buckets larger than the cap. max_window
+    # bounds the (q, win, d) candidate tensor: one degenerate bucket
+    # (duplicate-heavy cell) must not OOM the whole batch.
+    win = max(k, min(n, index.max_bucket_len * (2 * cutoff_buckets + 1), max_window))
     offs = jnp.arange(win, dtype=jnp.int32)
-    cand = jnp.minimum(start[:, None] + offs[None, :], n - 1)
-    valid = (start[:, None] + offs[None, :]) < end[:, None]
+    pos = start[:, None] + offs[None, :]
+    cand = jnp.clip(pos, 0, n - 1)
+    valid = pos < end[:, None]
     cpts = index.points[cand]
     d2 = jnp.sum((cpts - queries[:, None, :]) ** 2, axis=-1)
     d2 = jnp.where(valid, d2, jnp.inf)
     neg_top, idx = jax.lax.top_k(-d2, k)
-    gids = index.ids[jnp.take_along_axis(cand, idx, axis=1)]
+    gids = index.ids[jnp.take_along_axis(cand, idx, axis=1)].astype(jnp.int32)
     return jnp.sqrt(-neg_top), gids
+
+
+def knn(
+    index: CurveIndex,
+    queries: jax.Array,
+    *,
+    k: int = 3,
+    cutoff_buckets: int = 1,
+    use_pallas: bool | None = None,
+    max_window: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """Approximate k-NN: search the query's bucket ± cutoff_buckets along
+    the curve (paper: 'CUTOFF restricted to one bucket before and after').
+
+    The candidate window covers the true bucket extents up to
+    ``max_window`` slots per query — raise it for duplicate-heavy data
+    where one bucket exceeds that (at (q, max_window, d) memory cost).
+
+    Returns (distances (q, k), global ids (q, k)).
+    """
+    if use_pallas is None:
+        use_pallas = _pallas_default()
+    return _knn(index, queries, k, cutoff_buckets, use_pallas, max_window)
 
 
 def knn_bruteforce(points: jax.Array, queries: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:

@@ -33,6 +33,7 @@ the stable element identity across steps.
 from __future__ import annotations
 
 import functools
+import itertools
 from dataclasses import dataclass, field
 from typing import Literal
 
@@ -40,13 +41,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import curve_index as _ci
 from repro.core import dynamic as _dyn
 from repro.core import knapsack as _knapsack
 from repro.core import migration as _migration
 from repro.core import partitioner as _pt
 from repro.core import sfc as _sfc
 
-KEY_SENTINEL = np.uint32(0xFFFFFFFF)
+KEY_SENTINEL = _ci.KEY_SENTINEL  # inactive-slot key: sorts to the tail
+
+# Process-global token source for the kernels.ops key cache. Tokens must
+# be unique across engine *instances*, not just monotonic within one: the
+# cache is keyed (token, curve, bits, shape, ...), so two engines with
+# same-shaped point stores and private counters both starting at 0 would
+# silently read each other's (stale) keys.
+_TOKEN_SOURCE = itertools.count(1)
 
 
 @functools.partial(jax.jit, static_argnames=("num_parts",))
@@ -138,7 +147,12 @@ class Repartitioner:
         # calibrated in rebuild() from the live imbalance baseline
         self._rebuild_cost = rebuild_cost
         self.stats = RepartitionStats()
-        self._cache_token = 0
+        self._cache_token = next(_TOKEN_SOURCE)
+        # versioned query-index state: bumped on every geometry / frame /
+        # order change (insert, delete, rebuild) so serving layers holding
+        # a CurveIndex can detect staleness and refresh incrementally
+        self._index_version = 0
+        self._index_cache: tuple[tuple[int, int], _ci.CurveIndex] | None = None
 
         self.dps = _dyn.from_points(
             points,
@@ -171,6 +185,42 @@ class Repartitioner:
 
     def num_active(self) -> int:
         return int(self.dps.active.sum())
+
+    @property
+    def index_version(self) -> int:
+        """Bumped whenever the cached curve (keys/order/frame) changes —
+        i.e. whenever a ``curve_index()`` held elsewhere went stale."""
+        return self._index_version
+
+    def curve_index(self, bucket_size: int = 32) -> _ci.CurveIndex:
+        """The engine's cached curve as a shared, versioned ``CurveIndex``.
+
+        Incremental refresh: reuses the cached keys, sorted order and
+        frozen quantization frame — no key generation, no sort. Only the
+        bucket directory is (re)carved, so refreshing after a weight-only
+        step or a delta insert costs a gather + a tiny carve instead of a
+        cold ``build``. Memoized per (index_version, bucket_size); ids in
+        the returned index are storage-slot ids (stable across steps).
+        """
+        key = (self._index_version, bucket_size)
+        if self._index_cache is not None and self._index_cache[0] == key:
+            return self._index_cache[1]
+        order = self._order
+        idx = _ci.from_sorted(
+            self.dps.points[order],
+            order.astype(jnp.int32),
+            self._keys[order],
+            n_valid=self.num_active(),
+            frame_lo=self._frame_lo,
+            frame_hi=self._frame_hi,
+            bits=self.bits,
+            curve=self.cfg.curve,
+            bucket_size=bucket_size,
+            version=self._index_version,
+            token=self._cache_token,
+        )
+        self._index_cache = (key, idx)
+        return idx
 
     # -- key generation against the frozen frame ----------------------------
 
@@ -206,24 +256,22 @@ class Repartitioner:
                 hi=self._frame_hi,
             )
         else:
-            span = jnp.where(
-                self._frame_hi > self._frame_lo, self._frame_hi - self._frame_lo, 1.0
+            # the ONE keying convention: engine keys and query keys must
+            # come from the same function or queries go to wrong buckets
+            keys = _ci.keys_in_frame(
+                pts, self._frame_lo, self._frame_hi,
+                bits=self.bits, curve=self.cfg.curve,
             )
-            unit = jnp.clip((pts - self._frame_lo) / span, 0.0, 1.0 - 1e-7)
-            cells = (unit * (2**self.bits)).astype(jnp.uint32)
-            if self.cfg.curve == "morton":
-                keys = _sfc.morton_key_from_cells(cells, self.bits)
-            else:
-                keys = _sfc.hilbert_key_from_cells(cells, self.bits)
         self.stats.keygen_points += int(pts.shape[0])
         return keys
 
     def _invalidate_keys(self) -> None:
-        self._cache_token += 1
+        old = self._cache_token
+        self._cache_token = next(_TOKEN_SOURCE)
         try:  # notify the kernel-level cache (best effort: optional dep)
             from repro.kernels import ops as _kops
 
-            _kops.invalidate_key_cache(self._cache_token - 1)
+            _kops.invalidate_key_cache(old)
         except ImportError:  # pragma: no cover
             pass
 
@@ -277,8 +325,12 @@ class Repartitioner:
         self._resort()
 
     def _resort(self) -> None:
-        # sentinel keys (inactive slots) sort to the end; no key-gen here
+        # sentinel keys (inactive slots) sort to the end; no key-gen here.
+        # Every resort changes the curve order, so any CurveIndex snapshot
+        # out there is now stale: bump the version (insert/delete/rebuild
+        # all funnel through here; weight-only steps never do).
         self._order = jnp.argsort(self._keys, stable=True)
+        self._index_version += 1
 
     # -- slicing -------------------------------------------------------------
 
@@ -382,6 +434,9 @@ class DistributedRepartitioner:
         self._part_sorted: jax.Array | None = None
         self.full_partitions = 0
         self.reslices = 0
+        # bumped on every full partition (fresh keys => any serving index
+        # built on the previous curve is stale and must be swapped)
+        self.index_version = 0
 
     def partition(self, points: jax.Array, weights: jax.Array):
         keys, wts, part = _pt.distributed_partition(
@@ -392,6 +447,7 @@ class DistributedRepartitioner:
         self.valid = wts >= 0
         self._part_sorted = part
         self.full_partitions += 1
+        self.index_version += 1
         return keys, wts, part
 
     def rebalance(self, weights_sorted: jax.Array) -> jax.Array:

@@ -19,6 +19,7 @@ the roofline notes where that costs real FLOPs.
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 from typing import Any
 
@@ -28,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat as _compat
 from repro.configs.base import ModelConfig, ShardingRules
 
 _CTX = threading.local()
@@ -341,3 +343,177 @@ def apply_repartition(
         mesh, axis, payload, dest, capacity, fill_value=fill_value
     )
     return recv, valid
+
+
+# ---------------------------------------------------------------------------
+# Distributed query serving (paper §V-A over a sharded CurveIndex)
+# ---------------------------------------------------------------------------
+#
+# The serving layout: the CurveIndex's sorted arrays are split into
+# contiguous chunks over the mesh axis (shard rank = curve rank, the same
+# layout `distributed_partition` produces), the quantization frame is
+# replicated. A query batch arriving sharded P(axis) is answered with
+# exactly two all_to_all exchanges:
+#
+#   1. key each local query against the frame, find its *owner* shard by
+#      binary search over the shards' first keys (one tiny all_gather),
+#      and exchange query coordinates to owners;
+#   2. owners answer locally against their chunk (point location: exact
+#      key-run scan; kNN: curve-window candidate scan, distances + ids
+#      bit-packed into one reply buffer) and the answers ride the reverse
+#      all_to_all back in the mirrored lane layout — each source shard
+#      gathers its results at [owner, staged position] locally, so no
+#      slot ids are ever exchanged.
+#
+# Per-(src,dst) lane capacity equals the local query count, so routing can
+# never drop a query regardless of skew. Key-run / kNN windows clipped at
+# a chunk edge are reported via the `ok` flag (point location) or cost a
+# little recall at chunk seams (kNN) — the same CUTOFF economics as the
+# single-host path.
+
+
+def _exchange(x, axis):
+    """Lane s of my buffer -> shard s (flattened on receive)."""
+    r = jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+    return r.reshape((-1,) + r.shape[2:])
+
+
+@functools.lru_cache(maxsize=32)
+def _query_serve_fn(
+    mesh: Mesh,
+    axis: str,
+    mode: str,          # "pl" | "knn"
+    k: int,
+    bucket_cap: int,
+    win: int,
+    bits: int,
+    curve: str,
+):
+    """Jitted two-all_to_all query-serving executor, memoized per static
+    config (shard_map must run under jit — see partitioner._reslice_fn)."""
+    from repro.core import curve_index as _ci
+    from repro.core import migration as _migration
+
+    nshards = mesh.shape[axis]
+
+    def kernel(pts_loc, ids_loc, keys_loc, q_loc, flo, fhi):
+        n_loc = keys_loc.shape[0]
+        qcap = q_loc.shape[0]
+        qk = _ci.keys_in_frame(q_loc, flo, fhi, bits=bits, curve=curve)
+        # owner shard: last shard whose first key <= qk
+        firsts = jax.lax.all_gather(keys_loc[0], axis)          # (nshards,)
+        owner = jnp.clip(
+            jnp.searchsorted(firsts, qk, side="right").astype(jnp.int32) - 1,
+            0,
+            nshards - 1,
+        )
+        (buf_q,), pos_of = _migration.stage_rows_by_dest(
+            owner, (q_loc,), nshards, qcap, (0.0,)
+        )
+        rq = _exchange(buf_q, axis)                              # (nshards*qcap, d)
+        rqk = _ci.keys_in_frame(rq, flo, fhi, bits=bits, curve=curve)
+        # answers come back in the mirrored lane layout, so each source
+        # shard gathers its own results at [owner, pos] locally — no slot
+        # ids travel in either direction
+
+        def reply(ans):                                          # (r, c) -> (qcap, c)
+            back = jax.lax.all_to_all(
+                ans.reshape(nshards, qcap, -1), axis,
+                split_axis=0, concat_axis=0, tiled=False,
+            )
+            return back[owner, pos_of]
+
+        if mode == "pl":
+            lo_i = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
+            hi_i = jnp.searchsorted(keys_loc, rqk, side="right").astype(jnp.int32)
+            offs = jnp.arange(bucket_cap, dtype=jnp.int32)
+            pos = lo_i[:, None] + offs[None, :]
+            cand = jnp.clip(pos, 0, n_loc - 1)
+            hit = jnp.all(pts_loc[cand] == rq[:, None, :], axis=-1) & (pos < hi_i[:, None])
+            found = jnp.any(hit, axis=1)
+            slot = jnp.argmax(hit, axis=1)
+            gid = ids_loc[cand[jnp.arange(rq.shape[0]), slot]]
+            # a key-run can extend backwards into the previous shard (the
+            # owner is the LAST shard whose first key <= qk, so forward
+            # extension is impossible): flag those misses as uncertified
+            edge = (lo_i == 0) & (keys_loc[0] == rqk)
+            ok = found | (((hi_i - lo_i) <= bucket_cap) & ~edge)
+            ans = jnp.stack(
+                [found.astype(jnp.int32), jnp.where(found, gid, -1), ok.astype(jnp.int32)],
+                axis=-1,
+            )                                                    # (r, 3)
+            return reply(ans)
+
+        # kNN: candidate window around the insertion point on the chunk
+        pos0 = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
+        start = jnp.clip(pos0 - win // 2, 0, jnp.maximum(n_loc - win, 0))
+        offs = jnp.arange(win, dtype=jnp.int32)
+        pos = start[:, None] + offs[None, :]
+        cand = jnp.clip(pos, 0, n_loc - 1)
+        # pos < n_loc: when win exceeds the chunk, clipped indices repeat —
+        # without the bound one point could fill several of the k slots
+        valid = (pos < n_loc) & (keys_loc[cand] != jnp.uint32(_ci.KEY_SENTINEL))
+        d2 = jnp.sum((pts_loc[cand] - rq[:, None, :]) ** 2, axis=-1)
+        d2 = jnp.where(valid, d2, jnp.inf)
+        neg_top, top_i = jax.lax.top_k(-d2, k)
+        gids = ids_loc[jnp.take_along_axis(cand, top_i, axis=1)]
+        gids = jnp.where(jnp.isfinite(-neg_top), gids, -1)
+        dist = jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+        # distances + bit-cast ids share one (r, 2k) reply buffer: the
+        # whole kNN round stays at two all_to_all exchanges
+        packed = jnp.concatenate(
+            [dist, jax.lax.bitcast_convert_type(gids, jnp.float32)], axis=1
+        )
+        got = reply(packed)                                      # (qcap, 2k)
+        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32)
+
+    out_specs = P(axis) if mode == "pl" else (P(axis), P(axis))
+    return jax.jit(_compat.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P()),
+        out_specs=out_specs,
+        check_vma=False,
+    ))
+
+
+def serve_point_location(
+    mesh: Mesh,
+    axis: str,
+    pts_s: jax.Array,
+    ids_s: jax.Array,
+    keys_s: jax.Array,
+    queries: jax.Array,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    *,
+    bits: int,
+    curve: str = "morton",
+    bucket_cap: int = 64,
+) -> jax.Array:
+    """Distributed exact point location. ``queries`` (Q, d) sharded
+    P(axis), Q divisible by the axis size; returns (Q, 3) int32 columns
+    (found, id, ok)."""
+    fn = _query_serve_fn(mesh, axis, "pl", 0, bucket_cap, 0, bits, curve)
+    return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)
+
+
+def serve_knn(
+    mesh: Mesh,
+    axis: str,
+    pts_s: jax.Array,
+    ids_s: jax.Array,
+    keys_s: jax.Array,
+    queries: jax.Array,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    *,
+    bits: int,
+    curve: str = "morton",
+    k: int = 3,
+    win: int = 192,
+) -> tuple[jax.Array, jax.Array]:
+    """Distributed approximate kNN over the sharded curve. Returns
+    ((Q, k) distances, (Q, k) ids), invalid slots inf/-1."""
+    fn = _query_serve_fn(mesh, axis, "knn", k, 0, win, bits, curve)
+    return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)

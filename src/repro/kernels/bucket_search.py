@@ -37,6 +37,83 @@ def _search_kernel(q_ref, dir_ref, out_ref, *, steps: int, nb: int):
     out_ref[...] = lo
 
 
+def _fused_kernel(
+    pts_ref, lo_ref, span_ref, dir_ref, out_ref, *, bits: int, d: int, steps: int, nb: int
+):
+    """Fused key-gen + search: quantize a query block against the frame,
+    Morton-interleave, and binary-search the directory — one VMEM stage,
+    no intermediate key round-trip to HBM."""
+    pts = pts_ref[...]        # (BLOCK_Q, d) float32 query coordinates
+    flo = lo_ref[...]         # (1, d) frame lo
+    span = span_ref[...]      # (1, d) frame span (hi - lo, degenerate -> 1)
+    # op-for-op identical to curve_index.keys_in_frame (divide, clip to
+    # 1-1e-7, then scale by the exact power of two): a reciprocal-multiply
+    # here would disagree with the jnp path by 1 ulp on ~1e-5 of queries,
+    # i.e. route them to a different bucket than their stored key
+    unit = jnp.clip((pts - flo) / span, 0.0, jnp.float32(1.0 - 1e-7))
+    cells = (unit * jnp.float32(2**bits)).astype(jnp.uint32)
+    key = jnp.zeros((cells.shape[0],), dtype=jnp.uint32)
+    offset = 32 - bits * d    # left-align payload (same layout as sfc/morton)
+    for k in range(bits):
+        src_bit = bits - 1 - k
+        for i in range(d):
+            bit_in_word = 31 - (offset + k * d + i)
+            comp = (cells[:, i] >> jnp.uint32(src_bit)) & jnp.uint32(1)
+            key = key | (comp << jnp.uint32(bit_in_word))
+    dirk = dir_ref[...]       # (NB,) uint32 sorted boundary keys
+    lo = jnp.zeros_like(key, dtype=jnp.int32)
+    step = jnp.int32(1 << (steps - 1))
+    for _ in range(steps):
+        mid = lo + step
+        mid_c = jnp.minimum(mid, nb - 1)
+        probe = dirk[mid_c]
+        go = (probe <= key) & (mid <= nb - 1)
+        lo = jnp.where(go, mid, lo)
+        step = step // 2
+    out_ref[...] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def fused_locate(
+    queries: jax.Array,
+    boundary_keys: jax.Array,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Morton key-gen + directory search fused into one kernel.
+
+    Returns, per query point, the index of the last boundary key <= its
+    Morton key (clamped to 0) — i.e. its directory bucket.
+    """
+    q, d = queries.shape
+    assert bits * d <= 32, "single-word fused kernel: bits*d must fit 32 bits"
+    nb = boundary_keys.shape[0]
+    assert nb <= DIR_MAX, "two-level directory required beyond DIR_MAX"
+    steps = max(1, (nb - 1).bit_length())
+    span = jnp.where(frame_hi > frame_lo, frame_hi - frame_lo, 1.0)
+    span = span.astype(jnp.float32)[None, :]
+    flo = frame_lo.astype(jnp.float32)[None, :]
+    q_pad = pl.cdiv(q, BLOCK_Q) * BLOCK_Q
+    qp = jnp.zeros((q_pad, d), jnp.float32).at[:q].set(queries)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, d=d, steps=steps, nb=nb),
+        grid=(q_pad // BLOCK_Q,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_Q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+        interpret=interpret,
+    )(qp, flo, span, boundary_keys)
+    return out[:q]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bucket_search(qkeys: jax.Array, boundary_keys: jax.Array, *, interpret: bool = True) -> jax.Array:
     """For each query key, index of the last boundary <= key (uint32)."""

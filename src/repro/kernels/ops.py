@@ -135,3 +135,19 @@ def knapsack_parts(weights: jax.Array, num_parts: int) -> jax.Array:
 
 def bucket_search(qkeys: jax.Array, boundary_keys: jax.Array) -> jax.Array:
     return _bs.bucket_search(qkeys, boundary_keys, interpret=INTERPRET)
+
+
+def fused_locate(
+    queries: jax.Array,
+    boundary_keys: jax.Array,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+) -> jax.Array:
+    """Fused Morton key-gen + directory binary search (one kernel
+    dispatch): per query point, the index of the last boundary key <= its
+    key. The query-serving hot loop — point location and kNN bucket
+    lookup both ride on it when compiled kernels are enabled."""
+    return _bs.fused_locate(
+        queries, boundary_keys, frame_lo, frame_hi, bits, interpret=INTERPRET
+    )

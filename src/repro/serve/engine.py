@@ -33,16 +33,27 @@ class Request:
         return len(self.prompt) + len(self.generated)
 
 
-def knapsack_batches(requests: list[Request], batch_size: int) -> list[list[Request]]:
-    """Slice length-sorted requests into balanced decode batches."""
+def knapsack_batches(
+    requests: list,
+    batch_size: int,
+    *,
+    weight=None,
+    num_batches: int | None = None,
+) -> list[list]:
+    """Slice weight-sorted requests into balanced batches — the greedy
+    knapsack over a weighted curve applied to admission. Default weight
+    is decode length; the query engine batches by row count instead."""
     if not requests:
         return []
-    order = np.argsort([r.length for r in requests], kind="stable")
+    wfn = weight if weight is not None else (lambda r: r.length)
+    weights = [wfn(r) for r in requests]
+    order = np.argsort(weights, kind="stable")
     arranged = [requests[i] for i in order]
-    num_batches = max(1, int(np.ceil(len(requests) / batch_size)))
-    w = jnp.asarray([r.length for r in arranged], jnp.float32)
+    if num_batches is None:
+        num_batches = max(1, int(np.ceil(len(requests) / batch_size)))
+    w = jnp.asarray([weights[i] for i in order], jnp.float32)
     part = np.asarray(knapsack.slice_weighted_curve(w, num_batches))
-    out: list[list[Request]] = [[] for _ in range(num_batches)]
+    out: list[list] = [[] for _ in range(num_batches)]
     for r, p in zip(arranged, part):
         out[p].append(r)
     return [b for b in out if b]

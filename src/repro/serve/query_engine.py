@@ -1,0 +1,287 @@
+"""Distributed query serving over the shared CurveIndex (paper §V-A at
+serving scale).
+
+``DistributedQueryEngine`` turns the versioned ``CurveIndex`` into a
+query service:
+
+* **Sharded serving** — the index's sorted arrays are split into
+  contiguous curve chunks over a mesh axis; a query batch is routed to
+  its owner shard by curve key (one all_to_all out, answers ride one
+  all_to_all back — ``repro.distributed.sharding.serve_point_location`` /
+  ``serve_knn``). Without a mesh the engine answers locally through
+  ``repro.core.queries`` — same index, same semantics.
+* **Knapsack admission** — mixed-size query requests are grouped into
+  balanced rounds with the same greedy knapsack the decode engine uses
+  (``serve.engine.knapsack_batches``), so one huge batch cannot starve a
+  round. The ``AmortizedController`` (paper Alg. 3) meters per-round
+  imbalance and triggers re-batching of the in-flight queue when drift
+  exhausts the credits banked at admission.
+* **Live version swap** — ``maybe_refresh(owner)`` compares the engine's
+  index version against the owner's (``Repartitioner.index_version``)
+  and swaps in ``owner.curve_index()`` when stale. The refresh is the
+  incremental path: cached keys and order are reused, only the bucket
+  directory is re-carved and (in distributed mode) re-placed on shards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import curve_index as _ci
+from repro.core import queries as _q
+from repro.core.dynamic import AmortizedController
+from repro.serve.engine import knapsack_batches
+
+
+@dataclass(eq=False)  # identity semantics: ndarray fields break __eq__,
+class QueryRequest:   # and the run() queue removes requests by identity
+    """One batched query from one client. ``rid`` keys the result dict —
+    use unique rids (duplicates overwrite each other's results)."""
+
+    rid: int
+    queries: np.ndarray                 # (m, d) float32
+    kind: Literal["pl", "knn"] = "pl"   # point-location | k-nearest
+    k: int = 3
+
+    @property
+    def rows(self) -> int:
+        return int(np.asarray(self.queries).shape[0])
+
+
+@dataclass
+class ServeStats:
+    rounds: int = 0
+    rebatches: int = 0
+    queries_served: int = 0
+    index_swaps: int = 0
+    history: list = field(default_factory=list)
+
+
+class DistributedQueryEngine:
+    """Point-location / kNN serving over a (possibly sharded) CurveIndex.
+
+    >>> eng = DistributedQueryEngine(rp.curve_index(), mesh, "data")
+    >>> found, ids, ok = eng.point_location(q)
+    >>> rp.insert(new_pts, new_wts)                # geometry changed
+    >>> eng.maybe_refresh(rp)                      # live index swap
+    """
+
+    def __init__(
+        self,
+        index: _ci.CurveIndex,
+        mesh: jax.sharding.Mesh | None = None,
+        axis: str = "data",
+        *,
+        bucket_cap: int = 64,
+        cutoff_buckets: int = 1,
+        max_batch_rows: int = 4096,
+        max_window: int = 1024,
+    ):
+        self.mesh, self.axis = mesh, axis
+        self.bucket_cap = int(bucket_cap)
+        self.cutoff_buckets = int(cutoff_buckets)
+        self.max_window = int(max_window)
+        self.max_batch_rows = int(max_batch_rows)
+        self.controller = AmortizedController()
+        self.stats = ServeStats()
+        self.queue: list[QueryRequest] = []
+        self.version: int = -1
+        self.swap(index)
+
+    # -- index lifecycle -----------------------------------------------------
+
+    def swap(self, index: _ci.CurveIndex) -> None:
+        """Install a new index version (live: the next batch served uses
+        it). Distributed mode re-places the sorted arrays on shards —
+        still far cheaper than a cold build, which also pays key-gen and
+        the sort."""
+        self.index = index
+        self.version = int(index.version)
+        # directory granularity of the installed index: maybe_refresh
+        # preserves it, so a live swap never silently changes the
+        # cutoff-neighborhood geometry the engine was configured with
+        self.bucket_size = max(1, int(index.valid_count()) // index.num_buckets)
+        self.stats.index_swaps += 1
+        if self.mesh is None:
+            return
+        nsh = self.mesh.shape[self.axis]
+        n = index.capacity
+        n_pad = -(-n // nsh) * nsh
+        pts = index.points
+        ids = index.ids.astype(jnp.int32)
+        keys = index.keys
+        if n_pad != n:
+            pad = n_pad - n
+            pts = jnp.concatenate([pts, jnp.zeros((pad, pts.shape[1]), pts.dtype)])
+            ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
+            keys = jnp.concatenate(
+                [keys, jnp.full((pad,), jnp.uint32(0xFFFFFFFF), jnp.uint32)]
+            )
+        sh = NamedSharding(self.mesh, P(self.axis))
+        rep = NamedSharding(self.mesh, P())
+        self._pts_s = jax.device_put(pts, sh)
+        self._ids_s = jax.device_put(ids, sh)
+        self._keys_s = jax.device_put(keys, sh)
+        self._flo = jax.device_put(self.index.frame_lo, rep)
+        self._fhi = jax.device_put(self.index.frame_hi, rep)
+
+    def maybe_refresh(self, owner, bucket_size: int | None = None) -> bool:
+        """Swap in the owner's current index iff ours is stale, keeping
+        the installed directory granularity unless ``bucket_size`` says
+        otherwise. ``owner`` is anything with ``index_version`` +
+        ``curve_index()`` — today that is the single-host
+        ``Repartitioner``. A ``DistributedRepartitioner`` bumps
+        ``index_version`` but holds no point payload, so no index can be
+        derived from it: rebuild the CurveIndex from the migrated payload
+        and call ``swap`` directly."""
+        if int(owner.index_version) == self.version:
+            return False
+        self.swap(owner.curve_index(bucket_size or self.bucket_size))
+        return True
+
+    # -- one-shot serving ----------------------------------------------------
+
+    def point_location(self, queries: jax.Array) -> _q.PointLocation:
+        queries = jnp.asarray(queries, jnp.float32)
+        if self.mesh is None:
+            out = _q.point_location(self.index, queries, bucket_cap=self.bucket_cap)
+        else:
+            from repro.distributed import sharding as _shd
+
+            qp, nq = self._pad_shard(queries)
+            res = _shd.serve_point_location(
+                self.mesh, self.axis, self._pts_s, self._ids_s, self._keys_s,
+                qp, self._flo, self._fhi,
+                bits=self.index.bits, curve=self.index.curve,
+                bucket_cap=self.bucket_cap,
+            )
+            res = res[:nq]
+            out = _q.PointLocation(
+                res[:, 0].astype(bool), res[:, 1], res[:, 2].astype(bool)
+            )
+        self.stats.queries_served += int(queries.shape[0])
+        return out
+
+    def knn(self, queries: jax.Array, k: int = 3) -> tuple[jax.Array, jax.Array]:
+        queries = jnp.asarray(queries, jnp.float32)
+        if self.mesh is None:
+            out = _q.knn(
+                self.index, queries, k=k, cutoff_buckets=self.cutoff_buckets,
+                max_window=self.max_window,
+            )
+        else:
+            from repro.distributed import sharding as _shd
+
+            win = max(k, min(
+                self.index.max_bucket_len * (2 * self.cutoff_buckets + 1),
+                self.max_window,
+            ))
+            qp, nq = self._pad_shard(queries)
+            d, g = _shd.serve_knn(
+                self.mesh, self.axis, self._pts_s, self._ids_s, self._keys_s,
+                qp, self._flo, self._fhi,
+                bits=self.index.bits, curve=self.index.curve, k=k, win=win,
+            )
+            out = (d[:nq], g[:nq])
+        self.stats.queries_served += int(queries.shape[0])
+        return out
+
+    def _pad_shard(self, queries: jax.Array) -> tuple[jax.Array, int]:
+        """Pad the batch to a multiple of the axis size and shard it.
+        Pad rows route like real queries and are sliced off on return —
+        lane capacity equals the local count, so they can't evict one."""
+        nsh = self.mesh.shape[self.axis]
+        nq = queries.shape[0]
+        n_pad = -(-nq // nsh) * nsh
+        if n_pad != nq:
+            queries = jnp.concatenate(
+                [queries, jnp.zeros((n_pad - nq, queries.shape[1]), queries.dtype)]
+            )
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return jax.device_put(queries, sh), nq
+
+    # -- knapsack-batched serving of mixed request sizes ----------------------
+
+    def run(self, requests: list[QueryRequest]) -> dict[int, object]:
+        """Serve a mixed queue: knapsack-slice requests into balanced
+        rounds of ~max_batch_rows, answer each round in whole-batch
+        dispatches (one per (kind, k) group), and let the amortized
+        controller re-batch the remaining queue when round imbalance
+        exhausts its credits.
+
+        The engine's own ``self.queue`` is the live queue: ``requests``
+        are appended to it, ``submit`` may append more mid-flight, and
+        anything still queued when the current rounds run out is admitted
+        in a fresh knapsack pass — nothing is silently dropped."""
+        results: dict[int, object] = {}
+        self.queue.extend(requests)
+        pending = self.queue
+        rounds = self._admit(pending)
+        while rounds or pending:
+            if not rounds:
+                rounds = self._admit(pending)
+            batch = rounds.pop(0)
+            for r in batch:
+                pending.remove(r)
+            rows = sum(r.rows for r in batch)
+            self._serve_round(batch, results)
+            self.stats.rounds += 1
+            # imbalance metered against the ideal round: a round far above
+            # target rows means the knapsack's input drifted (requests
+            # added/removed) — Alg. 3 decides when re-batching pays
+            timeop = rows / max(self.max_batch_rows, 1)
+            if self.controller.observe(timeop, max(len(rounds), 1)) and pending:
+                # _admit re-banks the credits (controller.balanced) with
+                # the fresh round layout's baseline
+                rounds = self._admit(pending)
+                self.stats.rebatches += 1
+        return results
+
+    def submit(self, new: list[QueryRequest]) -> None:
+        """Enqueue more work onto the engine's live queue — ``run``
+        drains ``self.queue``, so mid-flight appends are picked up at the
+        next admission (re-batch or rounds running dry)."""
+        self.queue.extend(new)
+
+    def _admit(self, pending: list[QueryRequest]) -> list[list[QueryRequest]]:
+        if not pending:
+            return []
+        total = sum(r.rows for r in pending)
+        num_rounds = max(1, -(-total // self.max_batch_rows))
+        batches = knapsack_batches(
+            pending, 0, weight=lambda r: r.rows, num_batches=num_rounds
+        )
+        self.controller.balanced(
+            lb_cost=float(len(pending)), num_buckets=max(len(batches), 1),
+            timeop=total / max(num_rounds * self.max_batch_rows, 1),
+        )
+        return batches
+
+    def _serve_round(self, batch: list[QueryRequest], results: dict) -> None:
+        groups: dict[tuple, list[QueryRequest]] = {}
+        for r in batch:
+            groups.setdefault((r.kind, r.k if r.kind == "knn" else 0), []).append(r)
+        for (kind, k), reqs in groups.items():
+            q = jnp.concatenate([jnp.asarray(r.queries, jnp.float32) for r in reqs])
+            if kind == "pl":
+                found, ids, ok = self.point_location(q)
+                off = 0
+                for r in reqs:
+                    results[r.rid] = _q.PointLocation(
+                        found[off : off + r.rows],
+                        ids[off : off + r.rows],
+                        ok[off : off + r.rows],
+                    )
+                    off += r.rows
+            else:
+                d, g = self.knn(q, k=k)
+                off = 0
+                for r in reqs:
+                    results[r.rid] = (d[off : off + r.rows], g[off : off + r.rows])
+                    off += r.rows

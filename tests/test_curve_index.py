@@ -1,0 +1,165 @@
+"""The shared versioned CurveIndex: one key/bucket structure for queries,
+repartitioning, and the partitioner (ISSUE 2 tentpole)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import curve_index as ci
+from repro.core import partitioner as pt
+from repro.core import queries
+from repro.core.repartition import Repartitioner
+
+MORTON = pt.PartitionerConfig(curve="morton")
+
+
+def _cold_index_of(rp):
+    """Cold-build an index over the engine's active slots, with slot ids
+    and the engine's frozen frame — the oracle a refresh must agree with."""
+    act = np.nonzero(np.asarray(rp.dps.active))[0]
+    return ci.build(
+        rp.dps.points[jnp.asarray(act)],
+        jnp.asarray(act, jnp.int32),
+        frame=(rp._frame_lo, rp._frame_hi),
+        bits=rp.bits,
+        curve=rp.cfg.curve,
+    )
+
+
+def _assert_queries_agree(idx_a, idx_b, q, pts_by_slot):
+    fa = queries.point_location(idx_a, q)
+    fb = queries.point_location(idx_b, q)
+    np.testing.assert_array_equal(np.asarray(fa.found), np.asarray(fb.found))
+    np.testing.assert_array_equal(np.asarray(fa.ids), np.asarray(fb.ids))
+    da, ga = queries.knn(idx_a, q, k=3, cutoff_buckets=2)
+    db, gb = queries.knn(idx_b, q, k=3, cutoff_buckets=2)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db), atol=1e-6)
+
+
+def test_build_matches_queries_build_index(rng):
+    pts = jnp.asarray(rng.random((1024, 3)), jnp.float32)
+    a = ci.build(pts, bucket_size=32)
+    b = queries.build_index(pts, bucket_size=32)
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys))
+    np.testing.assert_array_equal(np.asarray(a.bucket_starts), np.asarray(b.bucket_starts))
+    assert a.bits == b.bits and a.curve == b.curve == "morton"
+    assert int(a.valid_count()) == 1024
+
+
+def test_from_partition_shares_keys_and_boundaries(rng):
+    """partition_with_index: one key generation feeds both the partition
+    and the query index; slice boundaries map onto the directory."""
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    w = jnp.asarray(0.5 + rng.random(2048), jnp.float32)
+    res, idx = pt.partition_with_index(pts, w, 16, MORTON, bucket_size=32)
+    # the index holds exactly the partition's keys, in the partition's order
+    np.testing.assert_array_equal(
+        np.asarray(idx.keys), np.asarray(res.keys)[np.asarray(res.perm)]
+    )
+    np.testing.assert_array_equal(np.asarray(idx.ids), np.asarray(res.perm))
+    # directory buckets -> owning part: non-decreasing, full coverage
+    bp = np.asarray(ci.bucket_parts(idx, res.boundaries))
+    assert (np.diff(bp) >= 0).all()
+    assert bp.min() == 0 and bp.max() == 15
+    # bucket_parts agrees with the per-element assignment at bucket starts
+    part_sorted = np.asarray(res.part)[np.asarray(res.perm)]
+    np.testing.assert_array_equal(bp, part_sorted[np.asarray(idx.bucket_starts[:-1])])
+    # and the index serves queries
+    f = queries.point_location(idx, pts[:128])
+    assert bool(f.found.all())
+    np.testing.assert_array_equal(np.asarray(pts)[np.asarray(f.ids)], np.asarray(pts[:128]))
+
+
+def test_rank_stats_rejected():
+    pts = jnp.zeros((64, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        pt.partition_with_index(pts, None, 4, pt.PartitionerConfig(stats="rank"))
+
+
+def test_refresh_reuses_cached_keys(rng):
+    """curve_index() must be the incremental path: no key generation, and
+    the weight-only steady state is a memoized hit."""
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    rp = Repartitioner(pts, None, num_parts=8, capacity=4096, cfg=MORTON)
+    kg0 = rp.stats.keygen_points
+    i0 = rp.curve_index()
+    assert rp.stats.keygen_points == kg0  # refresh generated no keys
+    assert rp.curve_index() is i0         # memoized per version
+    assert int(i0.version) == rp.index_version
+    assert int(i0.token) == rp.cache_token
+    # weight-only: no invalidation
+    rp.update_weights(jnp.asarray(rng.random(2048), jnp.float32) + 0.5)
+    rp.rebalance()
+    assert rp.curve_index() is i0
+    # the index's sorted keys ARE the engine's cached keys (shared, not rebuilt)
+    np.testing.assert_array_equal(
+        np.asarray(i0.keys), np.asarray(rp._keys[rp._order])
+    )
+
+
+def test_version_invalidation_insert_delete_migration(rng):
+    """After insert/delete/update_weights + a migration-emitting step,
+    queries against the refreshed index agree with a cold-built index."""
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    w = jnp.asarray(0.5 + rng.random(2048), jnp.float32)
+    rp = Repartitioner(pts, w, num_parts=8, capacity=4096, cfg=MORTON)
+    v0 = rp.index_version
+
+    # insert: version bumps, refreshed == cold
+    new_pts = jnp.asarray(rng.random((200, 3)), jnp.float32)
+    slots = rp.insert(new_pts, jnp.ones(200))
+    assert rp.index_version == v0 + 1
+    step = rp.step()  # emits a migration plan over the new geometry
+    assert step.plan is not None
+    fresh = rp.curve_index()
+    assert int(fresh.version) == rp.index_version
+    q = jnp.concatenate([new_pts[:64], jnp.asarray(rng.random((64, 3)), jnp.float32)])
+    _assert_queries_agree(fresh, _cold_index_of(rp), q, pts)
+    # inserted points are found under their storage-slot ids
+    f = queries.point_location(fresh, new_pts)
+    assert bool(f.found.all())
+    assert set(np.asarray(f.ids).tolist()) == set(np.asarray(slots).tolist())
+
+    # delete: version bumps, deleted points disappear from queries
+    v1 = rp.index_version
+    rp.delete(slots[:100])
+    assert rp.index_version == v1 + 1
+    fresh2 = rp.curve_index()
+    f2 = queries.point_location(fresh2, new_pts[:100])
+    assert not bool(f2.found.any())
+    _assert_queries_agree(fresh2, _cold_index_of(rp), q, pts)
+
+    # update_weights alone never stales the index; a rebuild does
+    v2 = rp.index_version
+    rp.update_weights(jnp.asarray(rng.random(rp.capacity), jnp.float32))
+    assert rp.index_version == v2
+    rp.rebuild()
+    assert rp.index_version > v2
+    _assert_queries_agree(rp.curve_index(), _cold_index_of(rp), q, pts)
+
+
+def test_key_cache_tokens_unique_across_engines(rng):
+    """Two same-shaped engines must not share key-cache entries: with
+    per-instance counters both starting at 0, the second engine read the
+    first one's stale keys (regression for the token-collision bug)."""
+    a = jnp.asarray(rng.random((512, 3)), jnp.float32)
+    b = jnp.asarray(rng.random((512, 3)), jnp.float32)  # same shape, new data
+    rp_a = Repartitioner(a, None, num_parts=4, capacity=512, cfg=MORTON)
+    rp_b = Repartitioner(b, None, num_parts=4, capacity=512, cfg=MORTON)
+    assert rp_a.cache_token != rp_b.cache_token
+    f = queries.point_location(rp_b.curve_index(), b[:64])
+    assert bool(f.found.all())  # fails if rp_b was served rp_a's keys
+
+
+def test_refreshed_index_sentinel_tail_is_inert(rng):
+    """Deleted slots sort to the sentinel tail and must never surface in
+    query results (their stored coordinates are stale)."""
+    pts = jnp.asarray(rng.random((512, 3)), jnp.float32)
+    rp = Repartitioner(pts, None, num_parts=4, capacity=1024, cfg=MORTON)
+    rp.delete(jnp.arange(256))
+    idx = rp.curve_index()
+    assert int(idx.valid_count()) == 256
+    d, g = queries.knn(idx, pts[jnp.arange(256, 512)], k=3, cutoff_buckets=2)
+    assert np.isfinite(np.asarray(d)).all()
+    assert (np.asarray(g) >= 256).all()  # only live slots are returned
+    f = queries.point_location(idx, pts[:256])
+    assert not bool(f.found.any())

@@ -12,8 +12,8 @@ def test_point_location_exact(rng):
     idx = queries.build_index(pts, bucket_size=32)
     sel = rng.choice(2048, 256, replace=False)
     q = pts[jnp.asarray(sel)]
-    found, gid = queries.point_location(idx, q)
-    assert bool(found.all())
+    found, gid, ok = queries.point_location(idx, q)
+    assert bool(found.all()) and bool(ok.all())
     # returned ids identify coordinates equal to the query
     np.testing.assert_array_equal(np.asarray(pts)[np.asarray(gid)], np.asarray(q))
 
@@ -22,9 +22,44 @@ def test_point_location_misses(rng):
     pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
     idx = queries.build_index(pts, bucket_size=32)
     q = jnp.asarray(rng.random((256, 3)) + 2.0, jnp.float32)  # outside bbox
-    found, gid = queries.point_location(idx, q)
+    found, gid, ok = queries.point_location(idx, q)
     assert not bool(found.any())
     assert (np.asarray(gid) == -1).all()
+    assert bool(ok.all())  # certified misses: the key runs were fully scanned
+
+
+def test_point_location_duplicate_heavy(rng):
+    """>bucket_cap points sharing one SFC key (one quantization cell):
+    the scan must either find the match or flag the miss as uncertified —
+    never miss silently (the pre-CurveIndex bug)."""
+    base = np.full((200, 3), 0.5, np.float32)
+    base += rng.random((200, 3)).astype(np.float32) * 1e-5  # one cell at bits=10
+    rest = rng.random((1848, 3)).astype(np.float32)
+    pts = jnp.asarray(np.concatenate([base, rest]))
+    idx = queries.build_index(pts, bucket_size=32)
+    q = pts[:200]
+    found, gid, ok = queries.point_location(idx, q, bucket_cap=64)
+    # every miss is flagged: found | ~ok covers all queries
+    assert bool((found | ~ok).all())
+    # raising the cap past the run length resolves every query exactly
+    found2, gid2, ok2 = queries.point_location(idx, q, bucket_cap=256)
+    assert bool(found2.all()) and bool(ok2.all())
+    np.testing.assert_array_equal(np.asarray(pts)[np.asarray(gid2)], np.asarray(q))
+
+
+def test_pallas_key_search_matches_jnp(rng):
+    """The bucket_search-kernel path (fused key-gen + directory search,
+    full-key run search) must agree with the jnp.searchsorted fallback."""
+    pts = jnp.asarray(rng.random((1024, 3)), jnp.float32)
+    idx = queries.build_index(pts, bucket_size=16)
+    q = jnp.concatenate([pts[:64], jnp.asarray(rng.random((64, 3)), jnp.float32)])
+    b_ref = queries.locate_bucket(idx, q, use_pallas=False)
+    b_pal = queries.locate_bucket(idx, q, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_pal))
+    r_ref = queries.point_location(idx, q, use_pallas=False)
+    r_pal = queries.point_location(idx, q, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(r_ref.found), np.asarray(r_pal.found))
+    np.testing.assert_array_equal(np.asarray(r_ref.ids), np.asarray(r_pal.ids))
 
 
 @pytest.mark.parametrize("k", [pytest.param(1, marks=pytest.mark.slow), 3, pytest.param(5, marks=pytest.mark.slow)])
@@ -48,6 +83,27 @@ def test_knn_distances_sorted_and_valid(rng):
     d = np.asarray(d)
     assert (np.diff(d, axis=1) >= -1e-6).all()
     assert np.isfinite(d).all()
+
+
+def test_knn_window_covers_large_buckets(rng):
+    """Candidate window derived from true bucket extents: with
+    bucket_size > the old fixed 64-slot cap, clustered data must still
+    reach full self-recall (the truncation bug regression test)."""
+    cl = 0.3 + 0.05 * rng.random((1500, 3)).astype(np.float32)  # dense cluster
+    rest = rng.random((548, 3)).astype(np.float32)
+    pts = jnp.asarray(np.concatenate([cl, rest]))
+    idx = queries.build_index(pts, bucket_size=128)
+    assert idx.max_bucket_len > 64  # the regime the old window undercovered
+    q = pts[:256]
+    d, ids = queries.knn(idx, q, k=1, cutoff_buckets=1)
+    # nearest neighbor of a stored point is itself — fails if the window
+    # stops short of the true bucket extent
+    assert float(np.asarray(d).max()) <= 1e-6
+    d3, id3 = queries.knn(idx, q[:64], k=3, cutoff_buckets=2)
+    d_b, id_b = queries.knn_bruteforce(pts, q[:64], k=3)
+    recall = float(np.mean(np.any(
+        np.asarray(id3)[:, :, None] == np.asarray(id_b)[:, None, :], axis=1)))
+    assert recall > 0.7, recall
 
 
 @given(n=st.integers(100, 2000), seed=st.integers(0, 1000))
