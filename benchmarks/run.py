@@ -18,6 +18,7 @@ def main() -> None:
         ("kdtree (paper Figs 2-5)", bench_partitioner.bench_kdtree_build),
         ("sfc traversal (Figs 8-10)", bench_partitioner.bench_sfc_traversal),
         ("knapsack (SIII-C)", bench_partitioner.bench_knapsack),
+        ("tree vs point partition (SIII-B)", bench_partitioner.bench_tree_vs_point_partition),
         ("dynamic trees (Table I)", bench_partitioner.bench_dynamic),
         ("queries (Figs 12-13)", bench_partitioner.bench_queries),
         ("incremental LB (SIV)", bench_partitioner.bench_migration),

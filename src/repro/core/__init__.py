@@ -13,15 +13,21 @@ from repro.core import (  # noqa: F401
     spmv,
 )
 from repro.core.curve_index import CurveIndex  # noqa: F401
+from repro.core.kdtree import BucketOrder, BucketSummary  # noqa: F401
 from repro.core.partitioner import (  # noqa: F401
     PartitionerConfig,
     PartitionResult,
+    distributed_bucket_partition,
+    distributed_bucket_reslice,
     distributed_partition,
     distributed_reslice,
+    materialize_perm,
     partition,
+    partition_buckets,
     partition_with_index,
 )
 from repro.core.repartition import (  # noqa: F401
+    DistributedBucketRepartitioner,
     DistributedRepartitioner,
     Repartitioner,
     RepartitionStep,

@@ -45,7 +45,7 @@ import numpy as np
 
 from repro.core import sfc as _sfc
 
-KEY_SENTINEL = np.uint32(0xFFFFFFFF)
+KEY_SENTINEL = _sfc.KEY_SENTINEL  # canonical definition lives in sfc
 
 
 @functools.partial(
@@ -60,12 +60,26 @@ KEY_SENTINEL = np.uint32(0xFFFFFFFF)
         "frame_hi",
         "version",
         "token",
+        "tree",
+        "node_keys",
     ),
     meta_fields=("bits", "curve", "max_bucket_len"),
 )
 @dataclasses.dataclass(frozen=True)
 class CurveIndex:
-    """SFC-sorted point store + bucket directory + quantization frame."""
+    """SFC-sorted point store + bucket directory + quantization frame.
+
+    Two addressing modes share the structure:
+
+    * **point-keyed** (``tree is None``) — each stored point carries its
+      own coordinate key; queries are keyed by coordinates.
+    * **tree-backed** (``tree`` set) — the directory IS the kd-tree's
+      leaf buckets: stored keys are *bucket* keys (every member of a
+      bucket shares one key) and queries are keyed by walking the tree
+      root→leaf and gathering ``node_keys`` — the paper's own
+      point-location path. Built by the bucket-statistics pipeline with
+      O(B) key generation.
+    """
 
     points: jax.Array         # (n, d) in curve order (tail slots may be stale)
     ids: jax.Array            # (n,) global/storage-slot id per sorted position
@@ -79,6 +93,8 @@ class CurveIndex:
     bits: int
     curve: str                # "morton" | "hilbert"
     max_bucket_len: int       # static max bucket extent (query window sizing)
+    tree: object | None = None       # LinearKdTree for tree-backed indexes
+    node_keys: jax.Array | None = None  # (M,) uint32 bucket key per tree node
 
     @property
     def num_buckets(self) -> int:
@@ -195,6 +211,48 @@ def build(
     )
 
 
+def from_buckets(
+    points_sorted: jax.Array,
+    ids_sorted: jax.Array,
+    keys_sorted: jax.Array,
+    bucket_starts,
+    bucket_keys: jax.Array,
+    *,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+    curve: str = "hilbert",
+    version: int = 0,
+    token: int = -1,
+    tree: object | None = None,
+    node_keys: jax.Array | None = None,
+) -> CurveIndex:
+    """Tree-backed constructor: the directory is given *explicitly* —
+    the kd-tree's leaf buckets in curve order — instead of equal-count
+    carving. ``bucket_starts`` (host ints or array, B+1 entries ending at
+    the valid count) and ``bucket_keys`` (B,) come straight from a
+    ``kdtree.BucketOrder``; stored keys are bucket keys, and ``tree`` +
+    ``node_keys`` give queries the root→leaf addressing path."""
+    starts = np.asarray(bucket_starts, dtype=np.int64)
+    max_len = int(np.diff(starts).max()) if starts.shape[0] > 1 else 1
+    return CurveIndex(
+        points=points_sorted,
+        ids=ids_sorted.astype(jnp.int32),
+        keys=keys_sorted,
+        bucket_starts=jnp.asarray(starts.astype(np.int32)),
+        bucket_keys=bucket_keys,
+        frame_lo=jnp.asarray(frame_lo, jnp.float32),
+        frame_hi=jnp.asarray(frame_hi, jnp.float32),
+        version=jnp.asarray(version, jnp.int32),
+        token=jnp.asarray(token, jnp.int32),
+        bits=int(bits),
+        curve=curve,
+        max_bucket_len=max(1, max_len),
+        tree=tree,
+        node_keys=node_keys,
+    )
+
+
 def from_partition(
     points: jax.Array,
     perm: jax.Array,
@@ -243,18 +301,24 @@ def keys_in_frame(
     bits: int,
     curve: str = "morton",
 ) -> jax.Array:
-    """SFC keys against a fixed quantization frame (points clipped into
-    the boundary cells — same convention as the repartitioning engine)."""
-    span = jnp.where(hi > lo, hi - lo, 1.0)
-    unit = jnp.clip((pts - lo) / span, 0.0, 1.0 - 1e-7)
-    cells = (unit * (2**bits)).astype(jnp.uint32)
-    if curve == "morton":
-        return _sfc.morton_key_from_cells(cells, bits)
-    return _sfc.hilbert_key_from_cells(cells, bits)
+    """SFC keys against a fixed quantization frame — delegates to the one
+    shared convention in :func:`repro.core.sfc.keys_in_frame` (kept as a
+    re-export so existing jitted query kernels don't move)."""
+    return _sfc.keys_in_frame(pts, lo, hi, bits=bits, curve=curve)
 
 
 def query_keys(index: CurveIndex, queries: jax.Array) -> jax.Array:
-    """Key a query batch onto the index's curve (frame + curve + bits)."""
+    """Key a query batch onto the index's curve.
+
+    Point-keyed indexes quantize the coordinates against the frame;
+    tree-backed indexes walk the tree root→leaf and gather the bucket
+    key — the paper's point-location path, and the only addressing under
+    which bucket-granular stored keys are exact."""
+    if index.tree is not None:
+        from repro.core import dynamic as _dyn
+
+        leaf = _dyn.locate(index.tree, queries, index.tree.max_depth)
+        return index.node_keys[leaf]
     return keys_in_frame(
         queries, index.frame_lo, index.frame_hi, bits=index.bits, curve=index.curve
     )

@@ -16,7 +16,12 @@ kd-tree:
 
 Point storage uses fixed capacity + an ``active`` mask so every operation
 is fixed-shape (XLA-friendly); this replaces the paper's concurrent
-linked lists (see DESIGN.md hardware-adaptation table).
+linked lists (see the hardware-adaptation table in ``DESIGN.md`` at the
+repo root, which also documents how these primitives feed the
+bucket-statistics partition pipeline: ``locate`` is the delta routing
+step, ``adjustments`` repairs the bucket set before summaries are
+re-keyed, and the tree counters maintained by insert/delete ARE the
+incremental bucket statistics).
 """
 from __future__ import annotations
 
@@ -108,18 +113,36 @@ def insert(dps: DynamicPointSet, new_pts: jax.Array, new_wts: jax.Array) -> Dyna
     return DynamicPointSet(points, weights, active, leaf_id, tree)
 
 
-def delete(dps: DynamicPointSet, slot_ids: jax.Array) -> DynamicPointSet:
-    """Deactivate points by storage slot id. Already-inactive ids and
-    duplicates (within or across calls) are no-ops: the weight and count
-    decrements are masked by ``active`` and a first-occurrence filter, so
-    tree counters stay consistent with storage."""
+def first_occurrence_mask(slot_ids: jax.Array) -> jax.Array:
+    """(k,) bool: True at the first occurrence of each id in the batch.
+
+    The dedup mask behind delete's no-op guarantee — shared with the
+    repartitioning engine so its bucket-summary deltas apply exactly the
+    ids the tree counters decrement."""
     order = jnp.argsort(slot_ids, stable=True)
     sorted_ids = slot_ids[order]
     first_sorted = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
     )
-    first = jnp.zeros_like(first_sorted).at[order].set(first_sorted)
-    act = dps.active[slot_ids] & first
+    return jnp.zeros_like(first_sorted).at[order].set(first_sorted)
+
+
+def delete(
+    dps: DynamicPointSet,
+    slot_ids: jax.Array,
+    removed: jax.Array | None = None,
+) -> DynamicPointSet:
+    """Deactivate points by storage slot id. Already-inactive ids and
+    duplicates (within or across calls) are no-ops: the weight and count
+    decrements are masked by ``active`` and a first-occurrence filter, so
+    tree counters stay consistent with storage. ``removed`` overrides the
+    mask (a caller that already computed ``active & first_occurrence``
+    passes it to avoid a second argsort of the batch)."""
+    act = (
+        dps.active[slot_ids] & first_occurrence_mask(slot_ids)
+        if removed is None
+        else removed
+    )
     wts = dps.weights[slot_ids] * act
     tree = _bump_counts(
         dps.tree, dps.leaf_id[slot_ids], wts, sign=-1, counts=act.astype(jnp.int32)

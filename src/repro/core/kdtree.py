@@ -273,6 +273,170 @@ def leaf_nodes(tree: LinearKdTree) -> jax.Array:
     return tree.is_leaf & (tree.count > 0)
 
 
+# ---------------------------------------------------------------------------
+# Bucket statistics — the partitioning substrate (paper §III-B/§IV)
+#
+# Partitions are computed from O(B) per-bucket summaries, never from the
+# O(n) raw points: buckets are SFC-ordered by their centroid key, the
+# knapsack slices bucket weights, and each point inherits its bucket's
+# rank/part through a leaf_id gather. The only O(n) work in the whole
+# pipeline is segment reductions and gathers — no per-point sort.
+# ---------------------------------------------------------------------------
+
+# non-bucket nodes sort to the tail; the canonical constant lives in sfc
+# and is shared with curve_index/repartition — the clamp in summary_keys
+# and the inactive-slot keys of tree-mode indexes must agree on it
+from repro.core.sfc import KEY_SENTINEL  # noqa: E402
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("count", "weight", "centroid", "bbox_lo", "bbox_hi", "is_bucket"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class BucketSummary:
+    """Per-leaf-bucket statistics in the (M,) node table (masked by
+    ``is_bucket``). This pytree is what every layer exchanges instead of
+    raw points: the local partitioner knapsacks ``weight``, the
+    distributed path all_gathers the whole summary (O(B) per shard), and
+    the incremental engine refreshes only the entries its delta dirtied.
+    """
+
+    count: jax.Array     # (M,) int32 points in the bucket
+    weight: jax.Array    # (M,) float32 summed point weight
+    centroid: jax.Array  # (M, d) float32 mean member coordinate
+    bbox_lo: jax.Array   # (M, d) float32 tight member bbox
+    bbox_hi: jax.Array   # (M, d)
+    is_bucket: jax.Array  # (M,) bool: leaf holding >= 1 point
+
+    @property
+    def num_nodes(self) -> int:
+        return self.count.shape[0]
+
+
+def bucket_summary(
+    tree: LinearKdTree,
+    points: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    leaf_id: jax.Array | None = None,
+    active: jax.Array | None = None,
+) -> BucketSummary:
+    """Collect per-bucket statistics with one pass of segment reductions.
+
+    ``leaf_id``/``active`` override the tree's build-time membership (the
+    dynamic point-store case, where storage has masked slots)."""
+    n = points.shape[0]
+    M = tree.num_nodes
+    if weights is None:
+        weights = jnp.ones((n,), dtype=jnp.float32)
+    if leaf_id is None:
+        leaf_id = tree.leaf_id
+    if active is None:
+        active = jnp.ones((n,), dtype=bool)
+    w = jnp.where(active, weights, 0.0)
+    cnt = jax.ops.segment_sum(active.astype(jnp.int32), leaf_id, num_segments=M)
+    wsum = jax.ops.segment_sum(w, leaf_id, num_segments=M)
+    csum = jax.ops.segment_sum(
+        jnp.where(active[:, None], points, 0.0), leaf_id, num_segments=M
+    )
+    centroid = csum / jnp.maximum(cnt[:, None].astype(jnp.float32), 1.0)
+    big = jnp.float32(3.4e38)
+    lo = jax.ops.segment_min(
+        jnp.where(active[:, None], points, big), leaf_id, num_segments=M
+    )
+    hi = jax.ops.segment_max(
+        jnp.where(active[:, None], points, -big), leaf_id, num_segments=M
+    )
+    lo = jnp.where(cnt[:, None] > 0, lo, 0.0)
+    hi = jnp.where(cnt[:, None] > 0, hi, 0.0)
+    return BucketSummary(
+        count=cnt,
+        weight=wsum,
+        centroid=centroid,
+        bbox_lo=lo,
+        bbox_hi=hi,
+        is_bucket=tree.is_leaf & (cnt > 0),
+    )
+
+
+def summary_keys(
+    summary: BucketSummary,
+    *,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+    curve: str = "hilbert",
+) -> jax.Array:
+    """(M,) SFC key per bucket centroid on the shared quantization frame
+    (`sfc.keys_in_frame` — the same convention the engine and the query
+    layer key against). Non-bucket nodes get the sentinel key so they
+    sort after every real bucket."""
+    from repro.core import sfc as _sfc
+
+    keys = _sfc.keys_in_frame(summary.centroid, frame_lo, frame_hi, bits=bits, curve=curve)
+    # the sentinel must stay unreachable by real buckets: at bits*d == 32
+    # a centroid in the last curve cell keys to 0xFFFFFFFF, which would
+    # silently drop the bucket behind the non-bucket tail — clamp it into
+    # the previous cell (order-preserving; merges only the two topmost
+    # cells at full key width)
+    keys = jnp.minimum(keys, KEY_SENTINEL - jnp.uint32(1))
+    return jnp.where(summary.is_bucket, keys, KEY_SENTINEL)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("node_keys", "rank", "order", "starts", "num_buckets"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class BucketOrder:
+    """SFC ordering of the buckets (all arrays node-table shaped).
+
+    ``rank[node]`` is the curve position of bucket ``node`` (tail ranks
+    for non-buckets); ``order[r]`` is the node at curve position ``r``;
+    ``starts[r]`` is the cumulative point count of buckets before ``r``
+    — i.e. the first point-level curve index of bucket ``order[r]``.
+    """
+
+    node_keys: jax.Array   # (M,) uint32, sentinel for non-buckets
+    rank: jax.Array        # (M,) int32 curve rank per node
+    order: jax.Array       # (M,) int32 node ids in curve order
+    starts: jax.Array      # (M+1,) int32 cumulative counts in curve order
+    num_buckets: jax.Array  # () int32
+
+
+def bucket_order(
+    summary: BucketSummary,
+    *,
+    frame_lo: jax.Array,
+    frame_hi: jax.Array,
+    bits: int,
+    curve: str = "hilbert",
+) -> BucketOrder:
+    """SFC-sort the O(B) bucket summaries (paper §III-B: "nodes are
+    re-ordered by their SFC keys"). The sort is over the node table —
+    its length is set by the tree depth, independent of n."""
+    node_keys = summary_keys(
+        summary, frame_lo=frame_lo, frame_hi=frame_hi, bits=bits, curve=curve
+    )
+    M = summary.num_nodes
+    order = jnp.argsort(node_keys, stable=True).astype(jnp.int32)
+    rank = jnp.zeros((M,), jnp.int32).at[order].set(jnp.arange(M, dtype=jnp.int32))
+    cnt_rank = summary.count[order]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt_rank).astype(jnp.int32)]
+    )
+    return BucketOrder(
+        node_keys=node_keys,
+        rank=rank,
+        order=order,
+        starts=starts,
+        num_buckets=jnp.sum(summary.is_bucket).astype(jnp.int32),
+    )
+
+
 def tree_order(
     tree: LinearKdTree,
     points: jax.Array,
@@ -280,33 +444,38 @@ def tree_order(
     curve: str = "hilbert",
     bits: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Order points by the SFC key of their *leaf bucket* center, breaking
-    ties by point key (paper §III-B: nodes are re-ordered by their SFC
-    keys; point data follows its bucket).
+    """Per-point curve placement from bucket statistics (paper §III-B:
+    nodes are re-ordered by their SFC keys; point data follows its
+    bucket).
 
-    Returns (perm, bucket_key_per_point).
+    Returns ``(bucket_rank_per_point, bucket_key_per_point)`` — both
+    O(n) *gathers* from the O(B) sorted summaries; no per-point sort
+    runs (the ordering depends only on bucket centroids, never on
+    weights). Callers that need a physical permutation (payload
+    reordering, index materialization) pay for it explicitly via
+    :func:`tree_perm`.
     """
     from repro.core import sfc as _sfc
 
-    keyfn = _sfc.hilbert_key if curve == "hilbert" else _sfc.morton_key
-    centers = 0.5 * (tree.bbox_lo + tree.bbox_hi)
-    # quantize bucket centers against the root bbox
-    d = tree.dim
     if bits is None:
-        bits = _sfc.max_bits_per_dim(d)
-    root_lo, root_hi = tree.bbox_lo[0], tree.bbox_hi[0]
-    span = jnp.where(root_hi > root_lo, root_hi - root_lo, 1.0)
-    unit = jnp.clip((centers - root_lo) / span, 0.0, 1.0 - 1e-7)
-    cells = (unit * (2**bits)).astype(jnp.uint32)
-    node_keys = (
-        _sfc.hilbert_key_from_cells(cells, bits)
-        if curve == "hilbert"
-        else _sfc.morton_key_from_cells(cells, bits)
+        bits = _sfc.max_bits_per_dim(tree.dim)
+    summary = bucket_summary(tree, points)
+    border = bucket_order(
+        summary,
+        frame_lo=tree.bbox_lo[0],
+        frame_hi=tree.bbox_hi[0],
+        bits=bits,
+        curve=curve,
     )
-    pt_bucket_key = node_keys[tree.leaf_id]
-    # stable sort by bucket key keeps intra-bucket order deterministic
-    perm = jnp.argsort(pt_bucket_key, stable=True)
-    return perm, pt_bucket_key
+    return border.rank[tree.leaf_id], border.node_keys[tree.leaf_id]
+
+
+def tree_perm(bucket_rank_per_point: jax.Array) -> jax.Array:
+    """Materialize the bucket-major point permutation from per-point
+    bucket ranks. This is the ONLY O(n log n) step of the tree pipeline
+    and nothing in ``partitioner.partition(use_tree=True)`` calls it —
+    it exists for consumers that must physically reorder a payload."""
+    return jnp.argsort(bucket_rank_per_point, stable=True)
 
 
 def validate(tree: LinearKdTree, points: jax.Array) -> dict:

@@ -31,11 +31,35 @@ from repro.core import sfc as _sfc
 
 
 class PartitionResult(NamedTuple):
-    perm: jax.Array        # (n,) int32: global ids in SFC order
+    perm: jax.Array | None  # (n,) int32 ids in SFC order; None on the tree
+    #                         path (no per-point sort ran — see
+    #                         ``materialize_perm``)
     part: jax.Array        # (n,) int32: part id per ORIGINAL element index
     keys: jax.Array        # (n,) uint32 (or (n,w)) SFC key per original element
+    #                        (bucket-granular on the tree path)
     boundaries: jax.Array  # (P+1,) slice starts into the SFC order
     loads: jax.Array       # (P,) weight per part
+    # tree-path extras (None on the point path):
+    tree: "_kdtree.LinearKdTree | None" = None
+    summary: "_kdtree.BucketSummary | None" = None
+    bucket_order: "_kdtree.BucketOrder | None" = None
+    bucket_rank: jax.Array | None = None   # (n,) int32 curve rank of each
+    #                                        point's bucket
+    bucket_part: jax.Array | None = None   # (M,) int32 part per tree node
+
+
+def materialize_perm(res: PartitionResult) -> jax.Array:
+    """Physical curve-order permutation of a ``PartitionResult``.
+
+    The point path carries it already; the tree path deliberately never
+    sorts points, so consumers that must reorder a payload (index
+    materialization, migration staging) pay the one stable argsort of
+    int32 bucket ranks here — outside the partition hot loop."""
+    if res.perm is not None:
+        return res.perm
+    if res.bucket_rank is None:
+        raise ValueError("result carries neither a permutation nor bucket ranks")
+    return _kdtree.tree_perm(res.bucket_rank).astype(jnp.int32)
 
 
 @dataclass(frozen=True)
@@ -71,9 +95,13 @@ def partition(
     """Single-process partition of (n, d) points into ``num_parts``.
 
     ``cfg.use_tree=True`` runs the paper's full pipeline (tree build →
-    bucket ordering); otherwise the closed-form SFC keys order the points
-    directly (equivalent for midpoint/regular decompositions, and the
-    rank-stats mode covers the median-splitter behaviour).
+    bucket statistics → bucket SFC order → knapsack over bucket
+    weights): the partition is computed entirely from O(B) bucket
+    summaries, each point inheriting its bucket's part through a
+    ``leaf_id`` gather — **no O(n)-length sort runs** (``res.perm`` is
+    None; see ``materialize_perm``). Otherwise the closed-form SFC keys
+    order the points directly (per-element balance granularity, at the
+    cost of an O(n) key sort every call).
     """
     n, d = points.shape
     if weights is None:
@@ -87,12 +115,17 @@ def partition(
             bucket_size=cfg.bucket_size,
             splitter=cfg.splitter,
         )
-        perm, keys = _kdtree.tree_order(tree, points, curve=cfg.curve, bits=cfg.bits)
+        return partition_buckets(tree, points, weights, num_parts, cfg)
+
+    if cfg.use_pallas and cfg.words == 1:
+        # Pallas key-gen kernels (single-word keys); same curve order as
+        # the jnp path — asserted by test_pallas_path_matches_jnp
+        keys = _keys_for(points, cfg)
+        perm = _sfc.argsort_keys(keys)
     else:
         perm, keys = _sfc.sfc_order(
             points, curve=cfg.curve, bits=cfg.bits, stats=cfg.stats, words=cfg.words
         )
-
     w_sorted = weights[perm]
     part_sorted = _knapsack.slice_weighted_curve(w_sorted, num_parts)
     boundaries = _knapsack.part_boundaries(w_sorted, num_parts)
@@ -100,6 +133,67 @@ def partition(
     # scatter part ids back to original element order
     part = jnp.zeros((n,), dtype=jnp.int32).at[perm].set(part_sorted)
     return PartitionResult(perm=perm, part=part, keys=keys, boundaries=boundaries, loads=loads)
+
+
+def partition_buckets(
+    tree: "_kdtree.LinearKdTree",
+    points: jax.Array,
+    weights: jax.Array | None = None,
+    num_parts: int = 8,
+    cfg: PartitionerConfig = PartitionerConfig(),
+    *,
+    summary: "_kdtree.BucketSummary | None" = None,
+    frame: tuple[jax.Array, jax.Array] | None = None,
+) -> PartitionResult:
+    """Knapsack partition over an existing tree's bucket statistics.
+
+    The shared core of every tree-backed layer: the local path builds a
+    tree and calls this; the incremental engine calls it on its cached
+    tree after a delta; the distributed path runs the same math on
+    all_gathered summaries. All device work is O(B) plus gathers.
+    """
+    n = points.shape[0]
+    if weights is None:
+        weights = jnp.ones((n,), dtype=jnp.float32)
+    bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
+    if summary is None:
+        summary = _kdtree.bucket_summary(tree, points, weights)
+    if frame is None:
+        frame = (tree.bbox_lo[0], tree.bbox_hi[0])
+    border = _kdtree.bucket_order(
+        summary, frame_lo=frame[0], frame_hi=frame[1], bits=bits, curve=cfg.curve
+    )
+    M = summary.num_nodes
+    # knapsack over bucket weights in curve order (non-buckets carry 0
+    # weight and sentinel keys, so they sit inert at the tail)
+    w_rank = summary.weight[border.order]
+    part_rank = _knapsack.slice_weighted_curve(w_rank, num_parts)
+    loads = _knapsack.part_loads(w_rank, part_rank, num_parts)
+    bucket_part = jnp.zeros((M,), jnp.int32).at[border.order].set(part_rank)
+    # points inherit their bucket's rank/part/key — gathers only
+    part = bucket_part[tree.leaf_id]
+    rank_pp = border.rank[tree.leaf_id]
+    keys_pp = border.node_keys[tree.leaf_id]
+    # point-level slice starts: first curve index of the first bucket of
+    # each part (part_rank is non-decreasing along the rank axis)
+    first_rank = jnp.searchsorted(
+        part_rank, jnp.arange(num_parts, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    boundaries = jnp.concatenate(
+        [border.starts[first_rank], jnp.array([n], dtype=jnp.int32)]
+    )
+    return PartitionResult(
+        perm=None,
+        part=part,
+        keys=keys_pp,
+        boundaries=boundaries,
+        loads=loads,
+        tree=tree,
+        summary=summary,
+        bucket_order=border,
+        bucket_rank=rank_pp,
+        bucket_part=bucket_part,
+    )
 
 
 def partition_with_index(
@@ -116,17 +210,26 @@ def partition_with_index(
     ``curve_index.bucket_parts(index, result.boundaries)`` maps each
     directory bucket to its owning part.
 
-    Returns (PartitionResult, CurveIndex). Restricted to the
-    configurations whose keys are addressable by query coordinates:
-    geometric stats (rank re-keys by data order — a query point has no
-    rank), single-word keys, closed-form ordering.
+    Returns (PartitionResult, CurveIndex). Point path: restricted to the
+    configurations whose keys are addressable by query coordinates —
+    geometric stats (rank re-keys by data order; a query point has no
+    rank) and single-word keys. Tree path (``cfg.use_tree=True``): the
+    index is **tree-backed** — its directory is exactly the tree's leaf
+    buckets on the shared quantization frame, the one (O(B)) key
+    generation is reused, and queries address it by the root→leaf walk.
+    The only per-point costs are the rank argsort and gathers that
+    materialize the sorted store.
     """
     from repro.core import curve_index as _ci
 
-    if cfg.stats != "geometric" or cfg.words != 1 or cfg.use_tree:
+    if cfg.use_tree:
+        res = partition(points, weights, num_parts, cfg)
+        index = tree_index(res, points, cfg=cfg)
+        return res, index
+    if cfg.stats != "geometric" or cfg.words != 1:
         raise ValueError(
-            "partition_with_index requires stats='geometric', words=1, "
-            "use_tree=False (keys must be query-addressable)"
+            "partition_with_index requires stats='geometric', words=1 "
+            "(keys must be query-addressable)"
         )
     res = partition(points, weights, num_parts, cfg)
     bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
@@ -134,6 +237,43 @@ def partition_with_index(
         points, res.perm, res.keys, curve=cfg.curve, bits=bits, bucket_size=bucket_size
     )
     return res, index
+
+
+def tree_index(
+    res: PartitionResult,
+    points: jax.Array,
+    *,
+    cfg: PartitionerConfig = PartitionerConfig(use_tree=True),
+    version: int = 0,
+    token: int = -1,
+) -> "object":
+    """Materialize the tree-backed ``CurveIndex`` from a tree-path
+    ``PartitionResult``: points in bucket-major order, directory = tree
+    leaf buckets, no new key generation (the partition's bucket keys ARE
+    the index's keys). Bucket granularity is the tree's buckets."""
+    from repro.core import curve_index as _ci
+
+    if res.tree is None:
+        raise ValueError("tree_index requires a tree-path PartitionResult")
+    border = res.bucket_order
+    perm = materialize_perm(res)
+    nb = int(border.num_buckets)
+    bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
+    return _ci.from_buckets(
+        points[perm],
+        perm,
+        res.keys[perm],
+        border.starts[: nb + 1],
+        border.node_keys[border.order[:nb]],
+        frame_lo=res.tree.bbox_lo[0],
+        frame_hi=res.tree.bbox_hi[0],
+        bits=bits,
+        curve=cfg.curve,
+        version=version,
+        token=token,
+        tree=res.tree,
+        node_keys=border.node_keys,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -311,5 +451,145 @@ def _partition_fn(
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis)),
+        check_vma=False,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Distributed bucket-summary exchange (tree path at scale)
+#
+# The sample-sort above moves O(n) raw points through an all_to_all every
+# partition. The bucket path exchanges O(B) *summaries* instead: each
+# shard builds a local kd-tree once, and every (re)partition after that
+# is one all_gather of (M,) bucket keys+weights, a tiny global sort of
+# S·M bucket records, the knapsack over bucket weights, and a leaf_id
+# gather. Points never move for the computation ("point data follows its
+# bucket" — the part assignment comes home, not the points), which is
+# what makes the partition-recompute hot loop cheap (Borrell et al.'s
+# aggregated-weights argument applied across shards).
+# ---------------------------------------------------------------------------
+
+def _global_bucket_slice(
+    w_leaf: jax.Array,
+    node_keys: jax.Array,
+    axis: str,
+    me: jax.Array,
+    nshards: int,
+    num_parts: int,
+) -> jax.Array:
+    """Global knapsack over all shards' bucket summaries; returns the
+    part id per LOCAL tree node. Runs inside shard_map. The only
+    collective is the all_gather of two (M,) arrays; the global sort is
+    over S·M bucket records, independent of n."""
+    M = node_keys.shape[0]
+    all_k = jax.lax.all_gather(node_keys, axis).reshape(-1)   # (S*M,)
+    all_w = jax.lax.all_gather(w_leaf, axis).reshape(-1)
+    order = jnp.argsort(all_k, stable=True)
+    part_rank = _knapsack.slice_weighted_curve(all_w[order], num_parts)
+    part_flat = jnp.zeros((nshards * M,), jnp.int32).at[order].set(part_rank)
+    return jax.lax.dynamic_slice(part_flat, (me * M,), (M,))
+
+
+def distributed_bucket_partition(
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    points: jax.Array,
+    weights: jax.Array,
+    num_parts: int,
+    cfg: PartitionerConfig = PartitionerConfig(use_tree=True),
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Cold bucket-path distributed partition.
+
+    Builds a local kd-tree per shard, keys its bucket centroids on ONE
+    globally shared quantization frame (all-reduced bbox), and runs the
+    global knapsack over the all_gathered bucket summaries. Inputs are
+    sharded on dim 0 over ``axis``; returns ``(part, leaf_id,
+    node_keys)`` with ``part``/``leaf_id`` in the ORIGINAL element
+    layout (elements do not move) and ``node_keys`` the (S·M,)-stacked
+    per-shard bucket keys. ``(leaf_id, node_keys)`` are the cached state
+    that makes every later `distributed_bucket_reslice` O(B) in
+    communication.
+    """
+    return _bucket_partition_fn(mesh, axis, num_parts, cfg)(points, weights)
+
+
+def distributed_bucket_reslice(
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    leaf_id: jax.Array,
+    weights: jax.Array,
+    node_keys: jax.Array,
+    num_parts: int,
+) -> jax.Array:
+    """The partition-recompute hot loop: fresh part assignment for new
+    weights over the cached per-shard trees.
+
+    Local work is one segment_sum (points → bucket weights) and one
+    gather (bucket part → point part); the only communication is the
+    O(B) summary all_gather. No key generation, no point sort, no
+    all_to_all — compare `distributed_partition`, which pays the full
+    sample-sort every call."""
+    return _bucket_reslice_fn(mesh, axis, num_parts)(leaf_id, weights, node_keys)
+
+
+@functools.lru_cache(maxsize=64)
+def _bucket_partition_fn(
+    mesh: jax.sharding.Mesh, axis: str, num_parts: int, cfg: PartitionerConfig
+):
+    """Jitted cold bucket-partition executor (see `_reslice_fn` for why
+    shard_map must run under jit)."""
+    nshards = mesh.shape[axis]
+
+    def kernel(pts, wts):
+        bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(pts.shape[1])
+        # ONE shared quantization frame: the global bbox, so every
+        # shard's bucket keys live on the same curve
+        lo = jnp.min(jax.lax.all_gather(jnp.min(pts, axis=0), axis), axis=0)
+        hi = jnp.max(jax.lax.all_gather(jnp.max(pts, axis=0), axis), axis=0)
+        tree = _kdtree.build(
+            pts,
+            wts,
+            max_depth=cfg.max_depth,
+            bucket_size=cfg.bucket_size,
+            splitter=cfg.splitter,
+        )
+        summary = _kdtree.bucket_summary(tree, pts, wts)
+        node_keys = _kdtree.summary_keys(
+            summary, frame_lo=lo, frame_hi=hi, bits=bits, curve=cfg.curve
+        )
+        me = jax.lax.axis_index(axis)
+        bucket_part = _global_bucket_slice(
+            summary.weight, node_keys, axis, me, nshards, num_parts
+        )
+        return bucket_part[tree.leaf_id], tree.leaf_id.astype(jnp.int32), node_keys
+
+    return jax.jit(_compat.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis)),
+        check_vma=False,
+    ))
+
+
+@functools.lru_cache(maxsize=64)
+def _bucket_reslice_fn(mesh: jax.sharding.Mesh, axis: str, num_parts: int):
+    """Jitted bucket-reslice executor, memoized per (mesh, axis, P)."""
+    nshards = mesh.shape[axis]
+
+    def kernel(leaf_id, wts, node_keys):
+        M = node_keys.shape[0]
+        w_leaf = jax.ops.segment_sum(wts, leaf_id, num_segments=M)
+        me = jax.lax.axis_index(axis)
+        bucket_part = _global_bucket_slice(
+            w_leaf, node_keys, axis, me, nshards, num_parts
+        )
+        return bucket_part[leaf_id]
+
+    return jax.jit(_compat.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
         check_vma=False,
     ))

@@ -83,7 +83,13 @@ def _searchsorted_u32(
 def _locate_bucket(index: CurveIndex, queries: jax.Array, use_pallas: bool) -> jax.Array:
     from repro.kernels import bucket_search as _bsk
 
-    if use_pallas and index.curve == "morton" and index.num_buckets <= _bsk.DIR_MAX:
+    if (
+        use_pallas
+        and index.curve == "morton"
+        and index.tree is None  # tree-backed keys come from a tree walk,
+        #                         not from query coordinates
+        and index.num_buckets <= _bsk.DIR_MAX
+    ):
         from repro.kernels import ops as _kops
 
         # fused key-gen + directory search in one kernel dispatch (beyond

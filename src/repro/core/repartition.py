@@ -32,6 +32,7 @@ the stable element identity across steps.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import itertools
 from dataclasses import dataclass, field
@@ -43,6 +44,7 @@ import numpy as np
 
 from repro.core import curve_index as _ci
 from repro.core import dynamic as _dyn
+from repro.core import kdtree as _kdtree
 from repro.core import knapsack as _knapsack
 from repro.core import migration as _migration
 from repro.core import partitioner as _pt
@@ -69,6 +71,25 @@ def _slice_kernel(order, active, weights, num_parts):
     part_sorted = jnp.where(act_sorted, part_sorted, -1)
     part = jnp.full(order.shape, -1, jnp.int32).at[order].set(part_sorted)
     loads = _knapsack.part_loads(w_sorted, jnp.maximum(part_sorted, 0), num_parts)
+    return part, loads
+
+
+@functools.partial(jax.jit, static_argnames=("num_parts",))
+def _bucket_slice_kernel(leaf_id, active, weights, order, num_parts):
+    """Tree-mode incremental re-slice: aggregate live weights onto the
+    buckets (one segment_sum), knapsack the O(B) bucket weights in the
+    cached curve order, gather part ids back through leaf_id. No
+    per-point sort exists anywhere in this path — inserts and deletes
+    never trigger a resort, unlike the cached-key path."""
+    M = order.shape[0]
+    w_leaf = jax.ops.segment_sum(
+        jnp.where(active, weights, 0.0), leaf_id, num_segments=M
+    )
+    w_rank = w_leaf[order]
+    part_rank = _knapsack.slice_weighted_curve(w_rank, num_parts)
+    part_by_node = jnp.zeros((M,), jnp.int32).at[order].set(part_rank)
+    part = jnp.where(active, part_by_node[leaf_id], -1)
+    loads = _knapsack.part_loads(w_rank, part_rank, num_parts)
     return part, loads
 
 
@@ -103,6 +124,10 @@ class RepartitionStats:
     # storage slots run through key generation; rebuilds are
     # capacity-shaped (fixed-shape kernels), inserts count the delta batch
     keygen_points: int = 0
+    # tree mode: buckets run through (O(B)) key generation at rebuilds,
+    # and summary entries refreshed by delta scatters between rebuilds
+    keygen_buckets: int = 0
+    summary_refreshes: int = 0
     history: list = field(default_factory=list)
 
 
@@ -119,6 +144,19 @@ class Repartitioner:
     other. ``insert``/``delete`` apply geometry deltas through the cached
     linearized kd-tree (``dynamic.locate``), so point location for the
     delta batch is a root→leaf walk, not a build.
+
+    Two substrates, selected by ``cfg.use_tree``:
+
+    * **cached-key mode** (default) — per-point SFC keys against the
+      frozen frame; inserts/deletes re-sort the cached n-length key
+      array, weight drift re-slices the cached order.
+    * **tree mode** — the kd-tree's leaf buckets are the statistics
+      substrate: rebuilds key the O(B) bucket centroids only (never the
+      points), inserts/deletes update the dirtied bucket summaries by
+      delta scatters (``dynamic.locate`` + Alg. 1 adjustments at
+      rebuild), and every re-slice is a knapsack over bucket weights —
+      **no per-point key array exists and no per-point sort ever runs**.
+      Balance granularity is one bucket instead of one element.
     """
 
     def __init__(
@@ -140,6 +178,7 @@ class Repartitioner:
             weights = jnp.ones((n,), dtype=jnp.float32)
         self.num_parts = int(num_parts)
         self.cfg = cfg
+        self.tree_mode = bool(cfg.use_tree)
         self.bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(d)
         self.frame_margin = float(frame_margin)
         self.controller = controller or _dyn.AmortizedController()
@@ -205,22 +244,66 @@ class Repartitioner:
         key = (self._index_version, bucket_size)
         if self._index_cache is not None and self._index_cache[0] == key:
             return self._index_cache[1]
-        order = self._order
-        idx = _ci.from_sorted(
+        if self.tree_mode:
+            idx = self._tree_curve_index()
+        else:
+            order = self._order
+            idx = _ci.from_sorted(
+                self.dps.points[order],
+                order.astype(jnp.int32),
+                self._keys[order],
+                n_valid=self.num_active(),
+                frame_lo=self._frame_lo,
+                frame_hi=self._frame_hi,
+                bits=self.bits,
+                curve=self.cfg.curve,
+                bucket_size=bucket_size,
+                version=self._index_version,
+                token=self._cache_token,
+            )
+        self._index_cache = (key, idx)
+        return idx
+
+    def _tree_curve_index(self) -> _ci.CurveIndex:
+        """Materialize the tree-backed index: slots in bucket-major order,
+        directory = the tree's buckets, queries addressed by root→leaf
+        walk. The rank argsort here is the only per-slot sort in all of
+        tree mode, paid once per index version (memoized by the caller),
+        never by the partitioning steps themselves."""
+        border = self._border
+        act = self.dps.active
+        M = border.rank.shape[0]
+        rank_pp = border.rank[self.dps.leaf_id]
+        key_pp = border.node_keys[self.dps.leaf_id]
+        # inactive slots after everything; live slots in leaves that were
+        # empty at the last rebuild keep their (tail) rank — the final
+        # directory bucket is widened to cover them
+        rank_eff = jnp.where(act, rank_pp, M + 1)
+        order = jnp.argsort(rank_eff, stable=True).astype(jnp.int32)
+        keys_sorted = jnp.where(act, key_pp, jnp.uint32(KEY_SENTINEL))[order]
+        nb = max(1, int(border.num_buckets))
+        cnt_leaf = jax.ops.segment_sum(
+            act.astype(jnp.int32), self.dps.leaf_id, num_segments=M
+        )
+        cnt_rank = np.asarray(cnt_leaf[border.order])
+        starts = np.zeros((nb + 1,), np.int64)
+        starts[1:] = np.cumsum(cnt_rank[:nb])
+        starts[nb] = self.num_active()  # widen the tail bucket (see above)
+        return _ci.from_buckets(
             self.dps.points[order],
-            order.astype(jnp.int32),
-            self._keys[order],
-            n_valid=self.num_active(),
+            order,
+            keys_sorted,
+            starts,
+            border.node_keys[border.order[:nb]],
             frame_lo=self._frame_lo,
             frame_hi=self._frame_hi,
             bits=self.bits,
             curve=self.cfg.curve,
-            bucket_size=bucket_size,
             version=self._index_version,
             token=self._cache_token,
+            tree=self.dps.tree,
+            node_keys=border.node_keys,
         )
-        self._index_cache = (key, idx)
-        return idx
 
     # -- key generation against the frozen frame ----------------------------
 
@@ -298,6 +381,17 @@ class Repartitioner:
                     f"({self.capacity}) nor active count ({self.num_active()})"
                 )
         self.dps = self.dps._replace(weights=new_w)
+        if self.tree_mode:
+            # keep the exposed summary truthful under weight drift: one
+            # segment_sum re-aggregates live weights onto the buckets
+            # (count/centroid/bbox/keys are untouched — weight drift
+            # moves nothing on the curve)
+            w_leaf = jax.ops.segment_sum(
+                jnp.where(self.dps.active, new_w, 0.0),
+                self.dps.leaf_id,
+                num_segments=self._summary.num_nodes,
+            )
+            self._summary = dataclasses.replace(self._summary, weight=w_leaf)
 
     def insert(self, points: jax.Array, weights: jax.Array) -> jax.Array:
         """Insert a point batch; returns their storage slot ids. Keys are
@@ -314,15 +408,107 @@ class Repartitioner:
             )
         free = jnp.nonzero(~self.dps.active, size=k, fill_value=self.capacity - 1)[0]
         self.dps = _dyn.insert(self.dps, points, weights)
-        self._keys = self._keys.at[free].set(self._keys_in_frame(points))
-        self._resort()
+        if self.tree_mode:
+            # bucket substrate: the located leaves are the only dirtied
+            # summaries — refresh them by delta scatter; no key-gen, no
+            # resort (there is no per-point key array to maintain)
+            self._summary_apply_delta(
+                points, jnp.asarray(weights, jnp.float32),
+                self.dps.leaf_id[free], sign=+1,
+            )
+            self._index_version += 1
+        else:
+            self._keys = self._keys.at[free].set(self._keys_in_frame(points))
+            self._resort()
         return free
 
     def delete(self, slot_ids: jax.Array) -> None:
         slot_ids = jnp.asarray(slot_ids)
-        self.dps = _dyn.delete(self.dps, slot_ids)
-        self._keys = self._keys.at[slot_ids].set(jnp.uint32(KEY_SENTINEL))
-        self._resort()
+        # first-occurrence live slots only — the exact mask dynamic.delete
+        # applies, so summary deltas track tree counters; computed once
+        # and handed down
+        removed = self.dps.active[slot_ids] & _dyn.first_occurrence_mask(slot_ids)
+        self.dps = _dyn.delete(self.dps, slot_ids, removed=removed)
+        if self.tree_mode:
+            w = jnp.where(removed, self.dps.weights[slot_ids], 0.0)
+            self._summary_apply_delta(
+                self.dps.points[slot_ids], w, self.dps.leaf_id[slot_ids],
+                sign=-1, counts=removed.astype(jnp.int32),
+            )
+            self._index_version += 1
+        else:
+            self._keys = self._keys.at[slot_ids].set(jnp.uint32(KEY_SENTINEL))
+            self._resort()
+
+    # -- tree-mode bucket statistics -----------------------------------------
+
+    def _refresh_bucket_stats(self) -> None:
+        """Full O(B) refresh: recollect summaries over the (possibly
+        adjusted) tree and re-key the bucket centroids on the frozen
+        frame. This — not an O(n) point key-gen — is what a tree-mode
+        rebuild pays."""
+        self._summary = _kdtree.bucket_summary(
+            self.dps.tree,
+            self.dps.points,
+            self.dps.weights,
+            leaf_id=self.dps.leaf_id,
+            active=self.dps.active,
+        )
+        self._border = _kdtree.bucket_order(
+            self._summary,
+            frame_lo=self._frame_lo,
+            frame_hi=self._frame_hi,
+            bits=self.bits,
+            curve=self.cfg.curve,
+        )
+        self.stats.keygen_buckets += int(self._border.num_buckets)
+
+    def _summary_apply_delta(
+        self,
+        pts: jax.Array,
+        wts: jax.Array,
+        leaf_ids: jax.Array,
+        sign: int,
+        counts: jax.Array | None = None,
+    ) -> None:
+        """Refresh ONLY the dirtied bucket summaries (O(delta) scatters).
+
+        Count/weight/centroid are exact; bboxes grow on insert and are
+        only re-tightened at the next rebuild (a stale-loose bbox never
+        mis-keys a bucket — keys are regenerated from centroids at
+        rebuild time). Bucket keys and the curve order are untouched:
+        membership deltas do not move buckets on the curve.
+        """
+        s = self._summary
+        ones = (jnp.ones_like(leaf_ids) if counts is None else counts) * sign
+        cnt = s.count.at[leaf_ids].add(ones)
+        wsum = s.weight.at[leaf_ids].add(jnp.float32(sign) * wts)
+        csum = s.centroid * s.count[:, None].astype(jnp.float32)
+        csum = csum.at[leaf_ids].add(
+            jnp.float32(sign) * pts * (jnp.abs(ones))[:, None].astype(jnp.float32)
+        )
+        centroid = csum / jnp.maximum(cnt[:, None].astype(jnp.float32), 1.0)
+        lo, hi = s.bbox_lo, s.bbox_hi
+        if sign > 0:
+            lo = lo.at[leaf_ids].min(pts)
+            hi = hi.at[leaf_ids].max(pts)
+        self._summary = _kdtree.BucketSummary(
+            count=cnt,
+            weight=wsum,
+            centroid=centroid,
+            bbox_lo=lo,
+            bbox_hi=hi,
+            is_bucket=self.dps.tree.is_leaf & (cnt > 0),
+        )
+        # count entries actually applied (masked no-ops excluded), so the
+        # counter reflects dirtied work, not batch size
+        self.stats.summary_refreshes += int(jnp.sum(jnp.abs(ones)))
+
+    def summary(self) -> "_kdtree.BucketSummary":
+        """Tree mode: the live per-bucket statistics."""
+        if not self.tree_mode:
+            raise ValueError("bucket summaries exist only with cfg.use_tree=True")
+        return self._summary
 
     def _resort(self) -> None:
         # sentinel keys (inactive slots) sort to the end; no key-gen here.
@@ -336,10 +522,17 @@ class Repartitioner:
 
     def _slice_current(self) -> tuple[jax.Array, np.ndarray, float]:
         """Knapsack-slice the cached curve; returns (part_per_slot, loads,
-        imbalance)."""
-        part, loads_d = _slice_kernel(
-            self._order, self.dps.active, self.dps.weights, self.num_parts
-        )
+        imbalance). Tree mode slices the O(B) bucket weights; key mode
+        slices the cached per-point order."""
+        if self.tree_mode:
+            part, loads_d = _bucket_slice_kernel(
+                self.dps.leaf_id, self.dps.active, self.dps.weights,
+                self._border.order, self.num_parts,
+            )
+        else:
+            part, loads_d = _slice_kernel(
+                self._order, self.dps.active, self.dps.weights, self.num_parts
+            )
         loads = np.asarray(loads_d)
         mean = max(float(loads.mean()), 1e-12)
         return part, loads, float(loads.max()) / mean
@@ -365,16 +558,21 @@ class Repartitioner:
         return self._emit("incremental", part, loads, imb, reused=True)
 
     def rebuild(self) -> RepartitionStep:
-        """Force a full rebuild: tree adjustments, fresh frame, fresh keys."""
+        """Force a full rebuild: tree adjustments, fresh frame, fresh keys
+        (bucket keys in tree mode — O(B), never the points)."""
         if self.stats.rebuilds or self.stats.incremental_steps:
             # skip Alg. 1 on the pristine initial build
             self.dps = _dyn.adjustments(self.dps)
         self._freeze_frame()
         self._invalidate_keys()
-        act = self.dps.active
-        keys = self._keys_in_frame(self.dps.points, cache=True)
-        self._keys = jnp.where(act, keys, jnp.uint32(KEY_SENTINEL))
-        self._resort()
+        if self.tree_mode:
+            self._refresh_bucket_stats()
+            self._index_version += 1
+        else:
+            act = self.dps.active
+            keys = self._keys_in_frame(self.dps.points, cache=True)
+            self._keys = jnp.where(act, keys, jnp.uint32(KEY_SENTINEL))
+            self._resort()
         part, loads, imb = self._slice_current()
         self.stats.rebuilds += 1
         cost = self._rebuild_cost if self._rebuild_cost is not None else float(self.num_active())
@@ -468,4 +666,69 @@ class DistributedRepartitioner:
         valid = np.asarray(self.valid)
         return _migration.migration_plan(
             np.asarray(old_part)[valid], np.asarray(new_part)[valid], self.num_parts
+        )
+
+
+class DistributedBucketRepartitioner:
+    """Incremental distributed repartitioning over bucket summaries.
+
+    The sample-sort engine above physically re-sorts the points across
+    shards and caches the sorted keys. This engine never moves a point
+    for the *computation*: ``partition`` builds one local kd-tree per
+    shard (keyed on a global shared frame) and caches ``(leaf_id,
+    node_keys)``; every ``rebalance`` then exchanges O(B) bucket
+    summaries (one all_gather) and gathers part ids home — the
+    partition-recompute hot loop costs neither key generation nor an
+    O(n) sort nor an all_to_all. Assignments stay in the ORIGINAL
+    element layout, ready for ``sharding.apply_repartition``.
+    """
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        axis: str,
+        num_parts: int,
+        cfg: _pt.PartitionerConfig | None = None,
+    ):
+        self.mesh, self.axis = mesh, axis
+        self.num_parts = int(num_parts)
+        # distributed trees default shallower than local ones: B buckets
+        # per shard is the exchanged payload
+        self.cfg = cfg or _pt.PartitionerConfig(use_tree=True, max_depth=8)
+        self.leaf_id: jax.Array | None = None
+        self.node_keys: jax.Array | None = None
+        self._part: jax.Array | None = None
+        self.full_partitions = 0
+        self.reslices = 0
+        self.index_version = 0
+
+    def partition(self, points: jax.Array, weights: jax.Array) -> jax.Array:
+        """Cold path: local trees + summary exchange. Caches the per-shard
+        tree state for the reslice hot loop."""
+        part, leaf_id, node_keys = _pt.distributed_bucket_partition(
+            self.mesh, self.axis, points, weights, self.num_parts, cfg=self.cfg
+        )
+        self.leaf_id, self.node_keys = leaf_id, node_keys
+        self._part = part
+        self.full_partitions += 1
+        self.index_version += 1
+        return part
+
+    def rebalance(self, weights: jax.Array) -> jax.Array:
+        """Hot path: new weights (original layout), same geometry — one
+        O(B) summary all_gather, no key-gen, no sort, no all_to_all."""
+        if self.leaf_id is None:
+            raise RuntimeError("rebalance() before the first partition()")
+        part = _pt.distributed_bucket_reslice(
+            self.mesh, self.axis, self.leaf_id, weights, self.node_keys,
+            self.num_parts,
+        )
+        self._part = part
+        self.reslices += 1
+        return part
+
+    def migration_between(self, old_part, new_part) -> _migration.MigrationPlan:
+        """Exchange plan between two original-layout assignments."""
+        return _migration.migration_plan(
+            np.asarray(old_part), np.asarray(new_part), self.num_parts
         )

@@ -27,10 +27,72 @@ import numpy as np
 
 Stats = Literal["geometric", "rank"]
 
+# The one sentinel key: inactive/non-bucket entries sort after every real
+# key. Real keys must stay below it (see kdtree.summary_keys's clamp);
+# curve_index / kdtree / repartition all alias THIS constant.
+KEY_SENTINEL = np.uint32(0xFFFFFFFF)
+
 
 def max_bits_per_dim(d: int, words: int = 1) -> int:
     """Largest per-dimension resolution that fits the key width."""
     return min(32, (32 * words) // d)
+
+
+# ---------------------------------------------------------------------------
+# The shared quantization frame
+#
+# Every consumer that keys points against a *fixed* box — the kd-tree's
+# bucket keying, the repartitioning engine's frozen frame, the query
+# layer's frame-addressed keys, the kernels.ops key cache — must use the
+# SAME clip-into-boundary-cells convention, or cached point keys and
+# fresh query keys land on different curves. These three functions are
+# that single convention; do not hand-roll span/unit/cells anywhere else.
+# ---------------------------------------------------------------------------
+
+def bbox_frame(
+    points: jax.Array, margin: float = 0.0
+) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) quantization frame: the data bbox, optionally widened by
+    ``margin`` × span per side (the engine's drift headroom)."""
+    lo = jnp.min(points, axis=0)
+    hi = jnp.max(points, axis=0)
+    if margin:
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        lo = lo - margin * span
+        hi = hi + margin * span
+    return lo, hi
+
+
+def cells_in_frame(
+    pts: jax.Array, lo: jax.Array, hi: jax.Array, bits: int
+) -> jax.Array:
+    """Quantize (n, d) points against a fixed frame into uint32 cells in
+    [0, 2^bits). Points outside the frame are clipped into the boundary
+    cells (drifted data stays addressable until the next frame refresh)."""
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    unit = jnp.clip((pts - lo) / span, 0.0, 1.0 - 1e-7)
+    return (unit * (2**bits)).astype(jnp.uint32)
+
+
+def keys_in_frame(
+    pts: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    bits: int,
+    curve: str = "morton",
+    words: int = 1,
+) -> jax.Array:
+    """SFC keys against a fixed quantization frame (see module note).
+
+    The ONE keying convention shared by the kd-tree bucket pipeline, the
+    repartitioning engine and the query layer — keys produced here are
+    mutually comparable for any inputs keyed on the same (lo, hi, bits).
+    """
+    cells = cells_in_frame(pts, lo, hi, bits)
+    if curve == "morton":
+        return morton_key_from_cells(cells, bits, words=words)
+    return hilbert_key_from_cells(cells, bits, words=words)
 
 
 # ---------------------------------------------------------------------------
@@ -234,10 +296,7 @@ def sfc_order(
 def point_key_morton3d(points: jax.Array, lo: jax.Array, hi: jax.Array, bits: int = 10):
     """Convenience: Morton key of query points against a fixed bbox (used by
     point location, which must quantize queries with the *tree's* bbox)."""
-    span = jnp.where(hi > lo, hi - lo, 1.0)
-    unit = jnp.clip((points - lo) / span, 0.0, 1.0 - 1e-7)
-    q = (unit * (2**bits)).astype(jnp.uint32)
-    return morton_key_from_cells(q, bits)
+    return keys_in_frame(points, lo, hi, bits=bits, curve="morton")
 
 
 def locality_score(points: jax.Array, perm: jax.Array) -> jax.Array:

@@ -22,9 +22,6 @@ import jax.numpy as jnp
 from repro import compat as _compat
 import numpy as np
 
-from repro.core import sfc as _sfc
-from repro.core import knapsack as _knapsack
-
 
 @dataclass(frozen=True)
 class SparsePartition:
@@ -52,19 +49,25 @@ def sfc_partition(
     *,
     curve: str = "hilbert",
     weights: np.ndarray | None = None,
+    cfg: "object | None" = None,
 ) -> np.ndarray:
-    """SFC partition of nonzeros as 2-D points (row, col)."""
-    nnz = rows.shape[0]
+    """SFC partition of nonzeros as 2-D points (row, col).
+
+    Routed through ``partitioner.partition`` — SpMV rides the shared
+    pipeline (Pallas key-gen kernels via ``cfg.use_pallas``, the bucket
+    tree path via ``cfg.use_tree``) instead of a private key-gen →
+    argsort → knapsack copy. ``cfg`` overrides the default 16-bit
+    ``curve`` configuration wholesale."""
+    from repro.core import partitioner as _pt
+
     pts = jnp.stack(
         [jnp.asarray(rows, jnp.float32), jnp.asarray(cols, jnp.float32)], axis=1
     )
-    keyfn = _sfc.hilbert_key if curve == "hilbert" else _sfc.morton_key
-    keys = keyfn(pts, 16)
-    order = jnp.argsort(keys, stable=True)
-    w = jnp.ones((nnz,), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
-    part_sorted = _knapsack.slice_weighted_curve(w[order], num_parts)
-    part = jnp.zeros((nnz,), jnp.int32).at[order].set(part_sorted)
-    return np.asarray(part)
+    if cfg is None:
+        cfg = _pt.PartitionerConfig(curve=curve, bits=16)
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    res = _pt.partition(pts, w, num_parts, cfg)
+    return np.asarray(res.part)
 
 
 def vector_chunks(n: int, num_parts: int) -> np.ndarray:

@@ -319,9 +319,14 @@ def apply_repartition(
     fill_value=0,
 ):
     """Move rows of ``payload`` (sharded on dim 0 over ``axis``) to the
-    shard given by ``part`` — the output of a `Repartitioner` step or
-    `distributed_reslice`. Invalid rows (part < 0) are parked on their
-    current shard and masked out of the result.
+    shard given by ``part`` — the output of a `Repartitioner` step,
+    `distributed_reslice`, or the bucket-summary path
+    (`distributed_bucket_partition` / `DistributedBucketRepartitioner`,
+    whose assignments are already in this original row layout: the
+    bucket path never moves rows to *compute* the partition, so this
+    exchange is the only data motion in the whole cycle). Invalid rows
+    (part < 0) are parked on their current shard and masked out of the
+    result.
 
     Returns (received, valid_mask) in the fixed-capacity layout of
     `migration.execute_shard_exchange`. ``capacity`` is per (src, dst)
@@ -370,6 +375,12 @@ def apply_repartition(
 # a chunk edge are reported via the `ok` flag (point location) or cost a
 # little recall at chunk seams (kNN) — the same CUTOFF economics as the
 # single-host path.
+#
+# Serving requires a POINT-KEYED index: queries are keyed from their
+# coordinates inside the kernel (`_ci.keys_in_frame`), so tree-backed
+# indexes — whose stored keys are bucket keys addressed by a kd-tree
+# walk — cannot shard into this layout (DistributedQueryEngine.swap
+# rejects them; they serve locally through repro.core.queries).
 
 
 def _exchange(x, axis):

@@ -90,9 +90,8 @@ def cached_sfc_key(
     _KEY_CACHE_STATS["misses"] += 1
     if lo is not None:
         b = bits if bits is not None else _sfc.max_bits_per_dim(points.shape[1])
-        span = jnp.where(hi > lo, hi - lo, 1.0)
-        unit = jnp.clip((points - lo) / span, 0.0, 1.0 - 1e-7)
-        cells = (unit * (2**b)).astype(jnp.uint32)
+        # the ONE frozen-frame quantization convention (sfc.cells_in_frame)
+        cells = _sfc.cells_in_frame(points, lo, hi, b)
         if use_pallas:
             fn = _mor.morton_from_cells if curve == "morton" else _hil.hilbert_from_cells
             keys = fn(cells, b, interpret=INTERPRET)

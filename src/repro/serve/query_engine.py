@@ -100,7 +100,19 @@ class DistributedQueryEngine:
         """Install a new index version (live: the next batch served uses
         it). Distributed mode re-places the sorted arrays on shards —
         still far cheaper than a cold build, which also pays key-gen and
-        the sort."""
+        the sort.
+
+        Tree-backed indexes (``index.tree`` set — a tree-mode
+        ``Repartitioner`` or ``partitioner.tree_index``) are served
+        locally: their queries are keyed by the kd-tree walk, which the
+        sharded serving kernels cannot run (they key by coordinates
+        inside ``shard_map``)."""
+        if self.mesh is not None and index.tree is not None:
+            raise ValueError(
+                "sharded serving requires a point-keyed CurveIndex; "
+                "tree-backed indexes serve locally (mesh=None) — use the "
+                "engine's cached-key mode for distributed serving"
+            )
         self.index = index
         self.version = int(index.version)
         # directory granularity of the installed index: maybe_refresh

@@ -118,6 +118,72 @@ def test_distributed_reslice_matches_full_repartition():
     assert "OK" in out
 
 
+def test_distributed_bucket_summary_matches_sample_sort():
+    """The bucket-summary exchange path vs the sample-sort path on the
+    same clustered, non-uniformly weighted input:
+
+      1. every element is assigned a valid part in the ORIGINAL layout
+         (the bucket path moves no points)
+      2. both paths conserve the global weight mass exactly
+      3. both meet the knapsack balance bound for their granularity
+         (element weight for sample-sort, bucket weight for summaries)
+      4. the cached-tree reslice equals a fresh bucket partition on the
+         drifted weights (same trees => identical knapsack input)
+    """
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import partitioner as pt
+        from repro.core.repartition import DistributedBucketRepartitioner
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ('data',))
+        rng = np.random.default_rng(0)
+        n, PARTS = 4096, 16
+        pts_h = rng.random((n,3)).astype(np.float32)
+        pts_h[: n // 2] = 0.45 + 0.1 * pts_h[: n // 2]
+        wts_h = (0.1 + rng.random(n)).astype(np.float32)
+        sh = NamedSharding(mesh, P('data'))
+        pts = jax.device_put(jnp.asarray(pts_h), sh)
+        wts = jax.device_put(jnp.asarray(wts_h), sh)
+        cfg = pt.PartitionerConfig(use_tree=True, max_depth=8, bucket_size=16)
+        part, leaf_id, node_keys = pt.distributed_bucket_partition(
+            mesh, 'data', pts, wts, PARTS, cfg=cfg)
+        p = np.asarray(part)
+        assert p.shape[0] == n and (p >= 0).all() and (p < PARTS).all()   # (1)
+        loads_b = np.zeros(PARTS); np.add.at(loads_b, p, wts_h)
+        np.testing.assert_allclose(loads_b.sum(), wts_h.sum(), rtol=1e-5) # (2)
+        # (3) bucket-granularity balance: spread <= 2 * max bucket weight
+        lid = np.asarray(leaf_id).reshape(8, -1)
+        maxbw = 0.0
+        wsh = wts_h.reshape(8, -1)
+        for s in range(8):
+            bw = np.zeros(lid[s].max() + 1); np.add.at(bw, lid[s], wsh[s])
+            maxbw = max(maxbw, bw.max())
+        assert loads_b.max() - loads_b.min() <= 2 * maxbw + 1e-3
+        # sample-sort on the same input meets its per-element bound
+        keys, w_srt, part_srt = pt.distributed_partition(
+            mesh, 'data', pts, wts, PARTS)
+        w_h, ps_h = np.asarray(w_srt), np.asarray(part_srt)
+        valid = ps_h >= 0
+        loads_s = np.zeros(PARTS); np.add.at(loads_s, ps_h[valid], w_h[valid])
+        np.testing.assert_allclose(loads_s.sum(), wts_h.sum(), rtol=1e-5) # (2)
+        assert loads_s.max() / loads_s.mean() < 1.05
+        assert loads_b.max() / loads_b.mean() < 1.25
+        # (4) cached-tree reslice == fresh bucket partition on new weights
+        w2_h = wts_h * (1.0 + 2.0 * (np.arange(n) % 5 == 0))
+        w2 = jax.device_put(jnp.asarray(w2_h), sh)
+        eng = DistributedBucketRepartitioner(mesh, 'data', PARTS, cfg)
+        eng.partition(pts, wts)
+        p_re = np.asarray(eng.rebalance(w2))
+        p_fresh = np.asarray(pt.distributed_bucket_partition(
+            mesh, 'data', pts, w2, PARTS, cfg=cfg)[0])
+        np.testing.assert_array_equal(p_re, p_fresh)
+        assert eng.reslices == 1 and eng.full_partitions == 1
+        print('OK')
+    """)
+    assert "OK" in out
+
+
 def test_shard_exchange_conserves():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp

@@ -82,8 +82,47 @@ def test_property_membership_and_occupancy(n, d, b, seed):
     assert rep["ok"], rep["problems"]
 
 
-def test_tree_order_is_permutation(rng):
+def test_tree_order_bucket_ranks(rng):
+    """tree_order returns per-point bucket ranks/keys (gathers, no point
+    sort); tree_perm materializes a valid bucket-major permutation."""
     pts = jnp.asarray(rng.random((1500, 3)), jnp.float32)
     tr = kdtree.build(pts, max_depth=10, bucket_size=32)
-    perm, _ = kdtree.tree_order(tr, pts)
-    assert len(np.unique(np.asarray(perm))) == 1500
+    rank, key = kdtree.tree_order(tr, pts)
+    rank_h, key_h = np.asarray(rank), np.asarray(key)
+    leaf = np.asarray(tr.leaf_id)
+    # rank/key are constant within a bucket and distinct across buckets
+    for l in np.unique(leaf)[:64]:
+        assert len(np.unique(rank_h[leaf == l])) == 1
+    assert len(np.unique(rank_h)) == len(np.unique(leaf))
+    # materialized permutation is a permutation and groups buckets
+    perm = np.asarray(kdtree.tree_perm(rank))
+    assert len(np.unique(perm)) == 1500
+    assert (np.diff(rank_h[perm]) >= 0).all()
+    assert (np.diff(key_h[perm].astype(np.int64)) >= 0).all()
+
+
+def test_bucket_summary_statistics(rng):
+    pts = jnp.asarray(rng.random((800, 3)), jnp.float32)
+    w = jnp.asarray((0.5 + rng.random(800)).astype(np.float32))
+    tr = kdtree.build(pts, w, max_depth=8, bucket_size=32)
+    s = kdtree.bucket_summary(tr, pts, w)
+    cnt, leaf = np.asarray(s.count), np.asarray(tr.leaf_id)
+    assert cnt.sum() == 800
+    np.testing.assert_array_equal(cnt, np.bincount(leaf, minlength=tr.num_nodes))
+    np.testing.assert_allclose(float(np.asarray(s.weight).sum()), float(w.sum()), rtol=1e-5)
+    # spot-check one bucket's centroid/bbox against the member oracle
+    l = leaf[0]
+    members = np.asarray(pts)[leaf == l]
+    np.testing.assert_allclose(np.asarray(s.centroid)[l], members.mean(0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s.bbox_lo)[l], members.min(0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s.bbox_hi)[l], members.max(0), rtol=1e-5)
+    # bucket_order: starts are cumulative counts, ranks invert order
+    bo = kdtree.bucket_order(
+        s, frame_lo=tr.bbox_lo[0], frame_hi=tr.bbox_hi[0], bits=10, curve="hilbert"
+    )
+    order, starts = np.asarray(bo.order), np.asarray(bo.starts)
+    np.testing.assert_array_equal(np.diff(starts), cnt[order])
+    nb = int(bo.num_buckets)
+    assert nb == (cnt > 0).sum()
+    keys_rank = np.asarray(bo.node_keys)[order].astype(np.int64)
+    assert (np.diff(keys_rank) >= 0).all()

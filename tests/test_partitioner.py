@@ -39,15 +39,123 @@ def test_hilbert_cut_leq_morton(rng):
     assert fracs["hilbert"] <= fracs["morton"] * 1.1  # allow small noise
 
 
-@pytest.mark.slow  # full tree-order pipeline: heaviest compile in the module
+@pytest.mark.slow  # full tree pipeline: heaviest compile in the module
 def test_tree_pipeline_matches_quality(rng):
     pts = jnp.asarray(rng.random((4096, 3)), jnp.float32)
     cfg = partitioner.PartitionerConfig(use_tree=True, max_depth=10)
     res = partitioner.partition(pts, None, num_parts=8, cfg=cfg)
     loads = np.asarray(res.loads)
-    assert loads.max() - loads.min() <= 2.0 + 1e-3
+    # balance granularity on the tree path is one *bucket*
+    max_bucket = float(np.asarray(res.summary.weight).max())
+    assert loads.max() - loads.min() <= 2 * max_bucket + 1e-3
     frac = metrics.knn_cross_fraction(np.asarray(pts), np.asarray(res.part), k=4, sample=512)
     assert frac < 0.3
+
+
+def test_tree_partition_no_point_sort_contract(rng):
+    """The bucket pipeline: part/keys/boundaries come from O(B) summaries
+    + gathers; res.perm is None because no per-point sort ran, and
+    materialize_perm pays it explicitly."""
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    w = jnp.asarray((0.5 + rng.random(2048)).astype(np.float32))
+    cfg = partitioner.PartitionerConfig(use_tree=True, max_depth=8)
+    res = partitioner.partition(pts, w, num_parts=8, cfg=cfg)
+    assert res.perm is None and res.summary is not None
+    part = np.asarray(res.part)
+    assert part.min() >= 0 and part.max() == 7
+    # loads are exact point-weight sums (bucket weights aggregate them)
+    oracle = np.zeros(8)
+    np.add.at(oracle, part, np.asarray(w))
+    np.testing.assert_allclose(np.asarray(res.loads), oracle, rtol=1e-4)
+    # boundaries slice the bucket-major order into the same part sizes
+    np.testing.assert_array_equal(
+        np.diff(np.asarray(res.boundaries)), np.bincount(part, minlength=8)
+    )
+    # every bucket maps to exactly one part (points follow their bucket)
+    leaf = np.asarray(res.tree.leaf_id)
+    bp = np.asarray(res.bucket_part)
+    assert (part == bp[leaf]).all()
+    perm = np.asarray(partitioner.materialize_perm(res))
+    assert len(np.unique(perm)) == 2048
+    assert (np.diff(np.asarray(res.bucket_rank)[perm]) >= 0).all()
+
+
+def test_tree_and_point_paths_agree_on_balance_bounds(rng):
+    """Property: both substrates respect their own knapsack guarantee —
+    spread <= 2x their balance granularity (element weight for the point
+    path, bucket weight for the tree path) — and produce spatially
+    compact parts on the same inputs."""
+    for seed in (0, 1, 2):
+        r = np.random.default_rng(seed)
+        n = 1024 + 512 * seed
+        pts = jnp.asarray(r.random((n, 2)), jnp.float32)
+        w = jnp.asarray((0.5 + r.random(n)).astype(np.float32))
+        res_pt = partitioner.partition(pts, w, 8, partitioner.PartitionerConfig())
+        res_tr = partitioner.partition(
+            pts, w, 8, partitioner.PartitionerConfig(use_tree=True, max_depth=8)
+        )
+        l_pt, l_tr = np.asarray(res_pt.loads), np.asarray(res_tr.loads)
+        assert l_pt.max() - l_pt.min() <= 2 * float(np.asarray(w).max()) + 1e-3
+        assert l_tr.max() - l_tr.min() <= 2 * float(
+            np.asarray(res_tr.summary.weight).max()
+        ) + 1e-3
+        # same total mass either way
+        np.testing.assert_allclose(l_pt.sum(), l_tr.sum(), rtol=1e-5)
+        for res in (res_pt, res_tr):
+            frac = metrics.knn_cross_fraction(
+                np.asarray(pts), np.asarray(res.part), k=4, sample=256
+            )
+            assert frac < 0.35, frac
+
+
+def test_partition_with_index_accepts_tree_path(rng):
+    """partition_with_index(use_tree=True): the tree-backed index answers
+    exact point location for stored points, with the directory equal to
+    the tree's buckets — one (bucket) key generation."""
+    from repro.core import queries
+
+    pts = jnp.asarray(rng.random((1024, 3)), jnp.float32)
+    cfg = partitioner.PartitionerConfig(use_tree=True, max_depth=8)
+    res, idx = partitioner.partition_with_index(pts, None, 4, cfg)
+    assert idx.tree is not None
+    assert idx.num_buckets == int(res.bucket_order.num_buckets)
+    q = pts[jnp.asarray(rng.choice(1024, 256, replace=False))]
+    found, ids, ok = queries.point_location(idx, q, bucket_cap=128)
+    assert bool(np.asarray(found).all()) and bool(np.asarray(ok).all())
+    # recovered ids point at coordinate-identical rows
+    np.testing.assert_array_equal(
+        np.asarray(pts)[np.asarray(ids)], np.asarray(q)
+    )
+    d, g = queries.knn(idx, q[:64], k=2)
+    assert float(np.asarray(d)[:, 0].max()) == 0.0  # self is nearest
+    # off-data queries miss (tree walk still lands in a real bucket)
+    qoff = jnp.asarray(rng.random((32, 3)).astype(np.float32) + 2.0)
+    f2, _, ok2 = queries.point_location(idx, qoff, bucket_cap=128)
+    assert not bool(np.asarray(f2).any())
+
+
+def test_tree_path_bucket_in_last_curve_cell_not_dropped(rng):
+    """Regression: at full key width (bits*d == 32) a bucket whose
+    centroid lands in the LAST curve cell used to key to the sentinel
+    and vanish behind the non-bucket tail — its points invisible to the
+    directory and mis-assigned to the last part."""
+    from repro.core import queries
+
+    n = 500
+    pts_h = rng.random((n, 2)).astype(np.float32)
+    pts_h[-40:] = [0.999, 0.999]  # a dense bucket at the bbox-max corner
+    pts = jnp.asarray(pts_h)
+    cfg = partitioner.PartitionerConfig(curve="morton", use_tree=True, max_depth=8)
+    res, idx = partitioner.partition_with_index(pts, None, 4, cfg)
+    # every point is inside the directory's coverage
+    assert int(np.asarray(idx.bucket_starts)[-1]) == n
+    assert int(np.asarray(res.bucket_order.starts)[int(res.bucket_order.num_buckets)]) == n
+    # the corner points are found exactly, and kNN sees them
+    q = jnp.asarray(np.array([[0.999, 0.999]], np.float32))
+    found, ids, ok = queries.point_location(idx, q, bucket_cap=128)
+    assert bool(np.asarray(found)[0])
+    d, g = queries.knn(idx, q, k=3)
+    assert float(np.asarray(d)[0, 0]) == 0.0
 
 
 def test_pallas_path_matches_jnp(rng):

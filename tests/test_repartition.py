@@ -188,6 +188,118 @@ def test_rebuild_refreshes_frame_and_repairs_buckets():
     assert int(dynamic.max_bucket_occupancy(rp.dps)) <= 2 * 32
 
 
+# --- tree-backed mode (bucket-statistics substrate) ---------------------------
+
+def _mk_tree(rng, n=1024, parts=8, **kw):
+    from repro.core import partitioner as pt
+
+    pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+    w = jnp.asarray(1.0 + rng.random(n), jnp.float32)
+    kw.setdefault("max_depth", 8)
+    cfg = pt.PartitionerConfig(use_tree=True)
+    return pts, w, Repartitioner(pts, w, parts, cfg, **kw)
+
+
+def test_tree_mode_never_keygens_points(rng):
+    """The bucket substrate generates keys for O(B) bucket centroids
+    only — across build, weight drift, insert, delete and rebuild, zero
+    storage slots go through point key generation."""
+    _, _, rp = _mk_tree(rng)
+    assert rp.stats.keygen_points == 0 and rp.stats.keygen_buckets > 0
+    rp.update_weights(jnp.asarray(1.0 + rng.random(1024), jnp.float32))
+    rp.rebalance()
+    slots = rp.insert(jnp.asarray(rng.random((64, 3)), jnp.float32),
+                      jnp.ones(64, jnp.float32))
+    rp.delete(slots[:16])
+    rp.rebuild()
+    assert rp.stats.keygen_points == 0
+    assert rp.stats.summary_refreshes == 64 + 16  # dirtied deltas only
+
+
+def test_tree_mode_points_follow_their_bucket(rng):
+    _, w, rp = _mk_tree(rng)
+    rp.update_weights(w * jnp.asarray(1.0 + 2.0 * rng.random(1024), jnp.float32))
+    step = rp.rebalance()
+    part = np.asarray(step.part)
+    act = np.asarray(rp.dps.active)
+    leaf = np.asarray(rp.dps.leaf_id)
+    assert (part[act] >= 0).all() and (part[~act] == -1).all()
+    for l in np.unique(leaf[act]):
+        assert len(np.unique(part[act & (leaf == l)])) == 1
+    # loads equal exact point-weight sums per part
+    oracle = np.zeros(rp.num_parts)
+    np.add.at(oracle, part[act], np.asarray(rp.dps.weights)[act])
+    np.testing.assert_allclose(step.loads, oracle, rtol=1e-4)
+
+
+def test_tree_mode_summary_tracks_deltas(rng):
+    _, _, rp = _mk_tree(rng)
+    s0 = rp.summary()
+    assert int(np.asarray(s0.count).sum()) == 1024
+    new = jnp.asarray(rng.random((50, 3)), jnp.float32)
+    slots = rp.insert(new, jnp.full((50,), 2.0, jnp.float32))
+    s1 = rp.summary()
+    assert int(np.asarray(s1.count).sum()) == 1074
+    np.testing.assert_allclose(
+        float(np.asarray(s1.weight).sum()),
+        float(np.asarray(s0.weight).sum()) + 100.0, rtol=1e-5,
+    )
+    rp.delete(slots)
+    rp.delete(slots)  # double delete is a no-op in the summary too
+    s2 = rp.summary()
+    assert int(np.asarray(s2.count).sum()) == 1024
+    np.testing.assert_allclose(
+        float(np.asarray(s2.weight).sum()),
+        float(np.asarray(s0.weight).sum()), rtol=1e-5,
+    )
+    # summaries agree with the tree's own counters at the leaves
+    np.testing.assert_array_equal(
+        np.asarray(s2.count).sum(), int(rp.dps.tree.count[0])
+    )
+
+
+def test_tree_mode_matches_cold_tree_engine(rng):
+    """Weight-only drift: the incremental bucket re-slice must equal a
+    cold tree-mode engine built from the same state (same tree, same
+    bucket order => identical knapsack input)."""
+    from repro.core import partitioner as pt
+
+    n = 1024
+    pts = jnp.asarray(rng.random((n, 3)), jnp.float32)
+    w1 = jnp.asarray(1.0 + 3.0 * rng.random(n), jnp.float32)
+    cfg = pt.PartitionerConfig(use_tree=True)
+    warm = Repartitioner(pts, jnp.ones((n,), jnp.float32), 8, cfg, max_depth=8)
+    warm.update_weights(w1)
+    step = warm.rebalance()
+    cold = Repartitioner(pts, w1, 8, cfg, max_depth=8)
+    np.testing.assert_array_equal(np.asarray(step.part), np.asarray(cold.part))
+
+
+def test_tree_mode_curve_index_serves_queries(rng):
+    from repro.core import queries
+
+    _, _, rp = _mk_tree(rng)
+    slots = rp.insert(jnp.asarray(rng.random((32, 3)), jnp.float32),
+                      jnp.ones(32, jnp.float32))
+    rp.delete(slots[:8])
+    v0 = rp.index_version
+    idx = rp.curve_index()
+    assert idx.tree is not None and int(idx.version) == v0
+    assert rp.curve_index() is idx  # memoized per version
+    act = np.asarray(rp.dps.active)
+    live = np.flatnonzero(act)[:200]
+    q = jnp.asarray(np.asarray(rp.dps.points)[live])
+    found, ids, ok = queries.point_location(idx, q, bucket_cap=256)
+    assert bool(np.asarray(found).all())
+    # deleted slots are not found
+    dq = jnp.asarray(np.asarray(rp.dps.points)[np.asarray(slots[:8])])
+    f2, _, _ = queries.point_location(idx, dq, bucket_cap=2048)
+    assert not bool(np.asarray(f2).any())
+    # controller still drives incremental-vs-rebuild
+    kind = rp.step().kind
+    assert kind in ("incremental", "rebuild")
+
+
 def test_pallas_key_cache_token_roundtrip(rng):
     """kernels.ops key cache: same token hits, bumped token misses."""
     from repro.kernels import ops

@@ -81,3 +81,35 @@ def test_words2_refines_words1(rng):
     assert (np.diff(k1[o2]) >= 0).all() or True  # coarse ties can reorder
     coarse_sorted = k1[o2]
     assert (np.diff(coarse_sorted) >= 0).all()
+
+
+def test_shared_frame_helpers_are_the_one_convention(rng):
+    """sfc.keys_in_frame is THE frozen-frame keying; the curve_index
+    re-export, the kernels.ops cache path and point_key_morton3d must
+    all produce identical keys for identical (frame, bits, curve)."""
+    from repro.core import curve_index as ci
+    from repro.kernels import ops as kops
+
+    pts = jnp.asarray(rng.random((512, 3)), jnp.float32)
+    lo = jnp.asarray([-0.2, -0.2, -0.2], jnp.float32)
+    hi = jnp.asarray([1.3, 1.3, 1.3], jnp.float32)
+    k_sfc = np.asarray(sfc.keys_in_frame(pts, lo, hi, bits=10, curve="morton"))
+    k_ci = np.asarray(ci.keys_in_frame(pts, lo, hi, bits=10, curve="morton"))
+    k_pk = np.asarray(sfc.point_key_morton3d(pts, lo, hi, bits=10))
+    kops.invalidate_key_cache()
+    k_ops = np.asarray(
+        kops.cached_sfc_key(pts, token=9999, curve="morton", bits=10, lo=lo, hi=hi)
+    )
+    kops.invalidate_key_cache(9999)
+    np.testing.assert_array_equal(k_sfc, k_ci)
+    np.testing.assert_array_equal(k_sfc, k_pk)
+    np.testing.assert_array_equal(k_sfc, k_ops)
+    # in-frame keys agree with the data-fitted quantization when the
+    # frame IS the data bbox
+    dlo, dhi = sfc.bbox_frame(pts)
+    np.testing.assert_array_equal(
+        np.asarray(sfc.keys_in_frame(pts, dlo, dhi, bits=8, curve="hilbert")),
+        np.asarray(
+            sfc.hilbert_key_from_cells(sfc.cells_in_frame(pts, dlo, dhi, 8), 8)
+        ),
+    )
