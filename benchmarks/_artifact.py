@@ -1,0 +1,43 @@
+"""Benchmark artifact writer: one ``BENCH_<name>.json`` per suite run.
+
+Every ``--smoke`` benchmark writes its headline numbers here so the
+nightly CI job can upload them and the perf trajectory is tracked as
+data, not just as pass/fail gate output. The schema is deliberately
+flat: a few identifying fields plus whatever metrics the suite measured
+(all JSON scalars), so a downstream plotter can concat files across
+runs without suite-specific parsing.
+
+Destination directory: ``REPRO_BENCH_ARTIFACT_DIR`` (default: current
+working directory — the repo root in CI, where the upload step globs
+``BENCH_*.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+
+def write_artifact(name: str, metrics: dict, *, passed: bool | None = None) -> str:
+    """Write ``BENCH_<name>.json`` and return its path.
+
+    ``metrics`` values must be JSON-serializable scalars (floats in
+    seconds/bytes/ratios as measured); ``passed`` records the smoke
+    gate's verdict when the suite has one.
+    """
+    payload = {
+        "name": name,
+        "unix_time": time.time(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "metrics": metrics,
+    }
+    if passed is not None:
+        payload["passed"] = bool(passed)
+    out_dir = os.environ.get("REPRO_BENCH_ARTIFACT_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

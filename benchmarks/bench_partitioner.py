@@ -257,10 +257,29 @@ def smoke_main() -> int:
     margin is genuinely unstable on a contended 2-core box), and
     re-measures up to 3 times, failing only if the bucket path never
     wins (executors are lru_cached, so retries pay no recompile)."""
+    try:
+        from benchmarks._artifact import write_artifact
+    except ImportError:
+        from _artifact import write_artifact
+
     rows = bench_tree_vs_point_partition(n=8_000)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    def _artifact(by_name, passed):
+        write_artifact(
+            "partitioner",
+            {
+                "n": 32_768,
+                "sample_sort_us": by_name.get("sample_sort"),
+                "bucket_summary_us": by_name.get("bucket_summary"),
+                "speedup": by_name["sample_sort"] / by_name["bucket_summary"]
+                if "bucket_summary" in by_name else None,
+            },
+            passed=passed,
+        )
+
     for attempt in range(3):
         rows = bench_bucket_vs_sample_recompute(n=32_768, steps=3)
         for name, us, derived in rows:
@@ -272,6 +291,7 @@ def smoke_main() -> int:
             print("WARNING: distributed gate skipped (< 8 devices)")
             return 0
         if by_name["bucket_summary"] < by_name["sample_sort"]:
+            _artifact(by_name, True)
             print(
                 f"PASS: bucket-summary recompute beats sample-sort "
                 f"({by_name['sample_sort'] / by_name['bucket_summary']:.1f}x, "
@@ -279,6 +299,7 @@ def smoke_main() -> int:
             )
             return 0
         print(f"# attempt {attempt + 1}: bucket path not faster, retrying")
+    _artifact(by_name, False)
     print(
         "FAIL: bucket-summary recompute "
         f"({by_name['bucket_summary']:.0f}us) not faster than "

@@ -117,6 +117,22 @@ def main():
     print(f"refresh (memoized hit)      : {t_hit*1e6:8.2f} us")
     print(f"insert {extra.shape[0]:6d} + refresh     : {t_ins*1e3:8.2f} ms")
 
+    try:
+        from benchmarks._artifact import write_artifact
+    except ImportError:
+        from _artifact import write_artifact
+    write_artifact(
+        "queries" + ("_dist" if mesh is not None else ""),
+        {
+            "n": N, "q": Q, "parts": PARTS, "distributed": mesh is not None,
+            "point_location_s": t_pl, "knn_s": t_knn,
+            "cold_build_s": t_cold, "refresh_s": t_refresh,
+            "memoized_hit_s": t_hit, "insert_refresh_s": t_ins,
+            "refresh_speedup": speedup,
+        },
+        passed=speedup >= MIN_REFRESH_SPEEDUP,
+    )
+
     if speedup < MIN_REFRESH_SPEEDUP:
         print(f"WARNING: refresh speedup {speedup:.1f}x "
               f"< required {MIN_REFRESH_SPEEDUP}x")

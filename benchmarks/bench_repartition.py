@@ -102,6 +102,14 @@ def main():
     print(f"incremental engine: {incr_ms:9.2f} ms/step   imbalance {imb(loads_i):.4f}")
     print(f"speedup           : {cold_ms / max(incr_ms, 1e-9):9.1f}x")
 
+    metrics = {
+        "n": N, "steps": STEPS, "parts": PARTS, "distributed": False,
+        "cold_ms": cold_ms, "incremental_ms": incr_ms,
+        "speedup": cold_ms / max(incr_ms, 1e-9),
+        "cold_imbalance": float(imb(loads_c)),
+        "incremental_imbalance": float(imb(loads_i)),
+    }
+
     if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and len(jax.devices()) >= 8:
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -122,6 +130,22 @@ def main():
         print(f"distributed full  : {full_t*1e3:9.2f} ms")
         print(f"distributed reslice: {res_t*1e3:8.2f} ms   "
               f"({full_t/max(res_t,1e-9):.1f}x)")
+        metrics.update(
+            distributed=True,
+            distributed_full_ms=full_t * 1e3,
+            distributed_reslice_ms=res_t * 1e3,
+            distributed_speedup=full_t / max(res_t, 1e-9),
+        )
+
+    try:
+        from benchmarks._artifact import write_artifact
+    except ImportError:
+        from _artifact import write_artifact
+    write_artifact(
+        "repartition" + ("_dist" if metrics["distributed"] else ""),
+        metrics,
+        passed=incr_ms < cold_ms,
+    )
 
     if incr_ms >= cold_ms:
         print("WARNING: incremental step not cheaper than cold rebuild")

@@ -44,3 +44,26 @@ print(
     f"(max bucket weight {float(np.asarray(res.summary.weight).max()):.3f}, "
     f"{nb} buckets)  kNN-cut={cross:.3f}  perm={res.perm}"
 )
+
+# --- the hierarchical (node -> device) decomposition --------------------
+# The paper's hybrid model: a coarse knapsack assigns curve slices to
+# NODES, then each node independently re-knapsacks its slice across its
+# local DEVICES — same bucket statistics, same frozen frame, two nested
+# slices. part = node * devices_per_node + device; a (1, D) plan is
+# bit-identical to the flat partition above.
+plan = partitioner.HierarchyPlan(num_nodes=4, devices_per_node=4)
+hres = partitioner.hierarchical_partition(
+    jnp.asarray(pts), jnp.asarray(weights), plan, cfg
+)
+node_loads = np.asarray(hres.node_loads)
+dev_loads = np.asarray(hres.loads).reshape(plan.num_nodes, plan.devices_per_node)
+print(f"\nhierarchy {plan.num_nodes} nodes x {plan.devices_per_node} devices:")
+for j in range(plan.num_nodes):
+    devs = " ".join(f"{x:8.1f}" for x in dev_loads[j])
+    print(f"  node {j}: load={node_loads[j]:9.1f}   devices: {devs}")
+print(
+    f"  node spread={node_loads.max()-node_loads.min():.3f}, "
+    f"device spread within worst node="
+    f"{float((dev_loads.max(1)-dev_loads.min(1)).max()):.3f} "
+    f"(both <= ~2x max bucket weight)"
+)

@@ -15,12 +15,18 @@ from repro.core import (  # noqa: F401
 from repro.core.curve_index import CurveIndex  # noqa: F401
 from repro.core.kdtree import BucketOrder, BucketSummary  # noqa: F401
 from repro.core.partitioner import (  # noqa: F401
+    HierarchicalResult,
+    HierarchyPlan,
     PartitionerConfig,
     PartitionResult,
     distributed_bucket_partition,
     distributed_bucket_reslice,
     distributed_partition,
     distributed_reslice,
+    hierarchical_bucket_partition,
+    hierarchical_bucket_reslice,
+    hierarchical_partition,
+    hierarchical_reslice,
     materialize_perm,
     partition,
     partition_buckets,
@@ -29,6 +35,7 @@ from repro.core.partitioner import (  # noqa: F401
 from repro.core.repartition import (  # noqa: F401
     DistributedBucketRepartitioner,
     DistributedRepartitioner,
+    HierarchicalRepartitioner,
     Repartitioner,
     RepartitionStep,
 )

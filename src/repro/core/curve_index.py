@@ -307,6 +307,24 @@ def keys_in_frame(
     return _sfc.keys_in_frame(pts, lo, hi, bits=bits, curve=curve)
 
 
+def owner_from_firsts(firsts: jax.Array, query_keys: jax.Array) -> jax.Array:
+    """Owner chunk of each query key: the LAST chunk whose first key is
+    <= the key. ``firsts`` (C,) are the first sorted keys of contiguous
+    curve chunks (shards, nodes, or a node's devices); keys below the
+    first chunk clamp to chunk 0, exactly like a too-small key clamps
+    into the first curve cell.
+
+    This is the ONE routing convention: the flat serving kernel applies
+    it once over all shard firsts; the two-level kernel applies it twice
+    (key -> node over node firsts, then key -> device over the owner
+    node's device firsts) and lands on the same shard because the firsts
+    are globally sorted.
+    """
+    n = firsts.shape[0]
+    idx = jnp.searchsorted(firsts, query_keys, side="right").astype(jnp.int32) - 1
+    return jnp.clip(idx, 0, n - 1)
+
+
 def query_keys(index: CurveIndex, queries: jax.Array) -> jax.Array:
     """Key a query batch onto the index's curve.
 

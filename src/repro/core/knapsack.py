@@ -58,6 +58,67 @@ def part_loads(weights: jax.Array, part: jax.Array, num_parts: int) -> jax.Array
     )
 
 
+# ---------------------------------------------------------------------------
+# Two-level (node -> device) nested knapsack
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "devices_per_node"))
+def device_slice_within_nodes(
+    weights: jax.Array,
+    node: jax.Array,
+    num_nodes: int,
+    devices_per_node: int,
+) -> jax.Array:
+    """Fine level of the hierarchy: device id within each node's slice.
+
+    ``node`` (n,) int32 must be non-decreasing along the curve — a coarse
+    knapsack output, fresh (``slice_weighted_curve(w, num_nodes)``) or
+    frozen from an earlier step (the intra-node-only re-slice keeps it).
+    Each node's contiguous slice is re-sliced into ``devices_per_node``
+    parts with the same midpoint rule as :func:`slice_weighted_curve`:
+    node weight offsets are read off the SAME exclusive prefix the flat
+    rule uses, so with ``num_nodes == 1`` the result is bit-identical to
+    ``slice_weighted_curve(weights, devices_per_node)`` — the flat path
+    IS the trivial hierarchy.
+    """
+    w = weights.astype(jnp.float32)
+    prefix = jnp.cumsum(w) - w  # exclusive prefix
+    total = prefix[-1] + w[-1]
+    # first curve index of each node's slice -> its exclusive weight
+    # offset; prefix extended by the total so empty tail nodes (start ==
+    # n) read a consistent offset
+    starts = jnp.searchsorted(
+        node, jnp.arange(num_nodes, dtype=node.dtype), side="left"
+    )
+    prefix_ext = jnp.concatenate([prefix, total[None]])
+    node_off = prefix_ext[starts]                      # (N,)
+    node_end = jnp.concatenate([node_off[1:], total[None]])
+    node_tot = node_end - node_off                     # (N,)
+    local_prefix = prefix - node_off[node]
+    ideal = node_tot[node] / devices_per_node
+    ideal = jnp.where(ideal > 0, ideal, 1.0)
+    dev = jnp.floor((local_prefix + 0.5 * w) / ideal).astype(jnp.int32)
+    return jnp.clip(dev, 0, devices_per_node - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "devices_per_node"))
+def two_level_slice(
+    weights: jax.Array, num_nodes: int, devices_per_node: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Nested greedy knapsack of a weighted curve: coarse slices to
+    ``num_nodes`` nodes, then each node's slice independently re-sliced
+    across its ``devices_per_node`` devices.
+
+    Returns ``(node, device, part)`` with ``part = node * devices_per_node
+    + device``, all (n,) int32 and non-decreasing along the curve. The
+    paper's balance guarantee nests: node loads differ by at most one max
+    element weight, and within every node the device loads do too.
+    """
+    node = slice_weighted_curve(weights, num_nodes)
+    dev = device_slice_within_nodes(weights, node, num_nodes, devices_per_node)
+    return node, dev, node * devices_per_node + dev
+
+
 def greedy_bins(weights: jax.Array, num_bins: int) -> jax.Array:
     """Non-contiguous greedy knapsack: heaviest-first into the lightest bin.
 

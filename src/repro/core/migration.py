@@ -34,26 +34,137 @@ class MigrationPlan:
         return float(stay) / max(float(total), 1.0)
 
 
+@dataclass(frozen=True)
+class HierarchicalMigrationPlan:
+    """Level-aware exchange plan over a node -> device hierarchy.
+
+    Parts group into nodes of ``devices_per_node`` consecutive ids
+    (``part = node * D + device``, the `partitioner.HierarchyPlan`
+    layout). Moves inside a node's diagonal block ride the fast
+    intra-node fabric; off-block moves cross the node boundary, where
+    every byte costs ``inter_node_cost`` times as much — so the
+    MAX_MSG_SIZE round capping is applied per level, with the inter-node
+    chunk shrunk by the multiplier (same byte budget on a costlier
+    link). The two levels schedule independently (disjoint fabrics):
+    ``rounds`` is their max, not their sum.
+    """
+
+    send_counts: np.ndarray   # (P, P) elements moving src part -> dst part
+    num_nodes: int
+    devices_per_node: int
+    inter_node_cost: float
+    chunk: int                # intra-node per-pair capacity per round
+    inter_chunk: int          # inter-node per-pair capacity per round
+    intra_rounds: int
+    inter_rounds: int
+    intra_moved: int          # moved within a node (off-diagonal, same block)
+    inter_moved: int          # moved across nodes (off-block)
+    max_intra_pair: int
+    max_inter_pair: int
+
+    @property
+    def rounds(self) -> int:
+        return max(self.intra_rounds, self.inter_rounds)
+
+    @property
+    def total_moved(self) -> int:
+        return self.intra_moved + self.inter_moved
+
+    @property
+    def max_pair(self) -> int:
+        return max(self.max_intra_pair, self.max_inter_pair)
+
+    @property
+    def stay_fraction(self) -> float:
+        """Device level: fraction not moving at all (diagonal)."""
+        total = self.send_counts.sum()
+        return float(np.trace(self.send_counts)) / max(float(total), 1.0)
+
+    @property
+    def stay_fraction_node(self) -> float:
+        """Node level: fraction staying on its node (diagonal blocks) —
+        what a hierarchy-aware re-slice keeps high under small drift."""
+        total = self.send_counts.sum()
+        stay = total - self.inter_moved
+        return float(stay) / max(float(total), 1.0)
+
+    def cost(self, bytes_per_elem: int = 16) -> float:
+        """Weighted byte cost: intra bytes + multiplier * inter bytes —
+        the objective a level-aware migration minimizes."""
+        return bytes_per_elem * (
+            self.intra_moved + self.inter_node_cost * self.inter_moved
+        )
+
+
+def _node_block_mask(num_parts: int, devices_per_node: int) -> np.ndarray:
+    node_of = np.arange(num_parts) // max(1, devices_per_node)
+    return node_of[:, None] == node_of[None, :]
+
+
 def plan_from_counts(
     send: np.ndarray,
     *,
     max_msg_bytes: int = 4 << 20,
     bytes_per_elem: int = 16,
-) -> MigrationPlan:
+    hierarchy=None,
+    inter_node_cost: float | None = None,
+) -> "MigrationPlan | HierarchicalMigrationPlan":
     """Build the round schedule from a precomputed (P, P) count matrix
-    (e.g. one reduced on-device by the repartitioning engine)."""
+    (e.g. one reduced on-device by the repartitioning engine).
+
+    With ``hierarchy`` (a `partitioner.HierarchyPlan`, or anything with
+    ``num_nodes`` / ``devices_per_node`` / ``inter_node_cost``), the plan
+    is level-aware: intra-node and inter-node pairs are capped into
+    rounds separately, and the inter-node per-round chunk is divided by
+    the cost multiplier (``inter_node_cost`` overrides the hierarchy's)
+    so the bounded message honors the same byte budget on the costlier
+    link. ``num_parts`` must equal the hierarchy's ``num_nodes *
+    devices_per_node``.
+    """
     send = np.asarray(send, dtype=np.int64)
     off_diag = send.copy()
     np.fill_diagonal(off_diag, 0)
-    max_pair = int(off_diag.max()) if off_diag.size else 0
     chunk = max(1, max_msg_bytes // bytes_per_elem)
-    rounds = int(np.ceil(max_pair / chunk)) if max_pair else 0
-    return MigrationPlan(
+    if hierarchy is None:
+        max_pair = int(off_diag.max()) if off_diag.size else 0
+        rounds = int(np.ceil(max_pair / chunk)) if max_pair else 0
+        return MigrationPlan(
+            send_counts=send,
+            rounds=rounds,
+            chunk=chunk,
+            total_moved=int(off_diag.sum()),
+            max_pair=max_pair,
+        )
+    N, D = int(hierarchy.num_nodes), int(hierarchy.devices_per_node)
+    if send.shape[0] != N * D:
+        raise ValueError(
+            f"count matrix is {send.shape[0]}x{send.shape[0]}, hierarchy "
+            f"expects {N} nodes x {D} devices = {N * D} parts"
+        )
+    mult = float(
+        hierarchy.inter_node_cost if inter_node_cost is None else inter_node_cost
+    )
+    if mult < 1.0:
+        raise ValueError(f"inter_node_cost must be >= 1, got {mult}")
+    same_node = _node_block_mask(N * D, D)
+    intra = np.where(same_node, off_diag, 0)
+    inter = np.where(same_node, 0, off_diag)
+    max_intra = int(intra.max()) if intra.size else 0
+    max_inter = int(inter.max()) if inter.size else 0
+    inter_chunk = max(1, int(max_msg_bytes / (bytes_per_elem * mult)))
+    return HierarchicalMigrationPlan(
         send_counts=send,
-        rounds=rounds,
+        num_nodes=N,
+        devices_per_node=D,
+        inter_node_cost=mult,
         chunk=chunk,
-        total_moved=int(off_diag.sum()),
-        max_pair=max_pair,
+        inter_chunk=inter_chunk,
+        intra_rounds=int(np.ceil(max_intra / chunk)) if max_intra else 0,
+        inter_rounds=int(np.ceil(max_inter / inter_chunk)) if max_inter else 0,
+        intra_moved=int(intra.sum()),
+        inter_moved=int(inter.sum()),
+        max_intra_pair=max_intra,
+        max_inter_pair=max_inter,
     )
 
 
@@ -64,23 +175,19 @@ def migration_plan(
     *,
     max_msg_bytes: int = 4 << 20,
     bytes_per_elem: int = 16,
-) -> MigrationPlan:
-    """Count matrix + round schedule honoring MAX_MSG_SIZE."""
-    old = np.asarray(old_part)
-    new = np.asarray(new_part)
+    hierarchy=None,
+) -> "MigrationPlan | HierarchicalMigrationPlan":
+    """Count matrix + round schedule honoring MAX_MSG_SIZE — the ONE
+    assignment-pair -> count-matrix builder; all schedule semantics
+    (including the level-aware ``hierarchy`` mode) live in
+    `plan_from_counts`."""
     send = np.zeros((num_parts, num_parts), dtype=np.int64)
-    np.add.at(send, (old, new), 1)
-    off_diag = send.copy()
-    np.fill_diagonal(off_diag, 0)
-    max_pair = int(off_diag.max()) if off_diag.size else 0
-    chunk = max(1, max_msg_bytes // bytes_per_elem)
-    rounds = int(np.ceil(max_pair / chunk)) if max_pair else 0
-    return MigrationPlan(
-        send_counts=send,
-        rounds=rounds,
-        chunk=chunk,
-        total_moved=int(off_diag.sum()),
-        max_pair=max_pair,
+    np.add.at(send, (np.asarray(old_part), np.asarray(new_part)), 1)
+    return plan_from_counts(
+        send,
+        max_msg_bytes=max_msg_bytes,
+        bytes_per_elem=bytes_per_elem,
+        hierarchy=hierarchy,
     )
 
 

@@ -30,6 +30,75 @@ from repro.core import knapsack as _knapsack
 from repro.core import sfc as _sfc
 
 
+@dataclass(frozen=True)
+class HierarchyPlan:
+    """First-class description of the two-level (node -> device) mesh.
+
+    The paper's partitioner is *hybrid*: distributed across nodes,
+    multi-threaded within a node. On a JAX mesh that is a 2-D
+    ``(node_axis, device_axis)`` decomposition: a coarse knapsack assigns
+    curve slices to nodes, then each node independently re-knapsacks its
+    slice across ``devices_per_node`` local parts. ``num_nodes == 1`` is
+    the flat path — every flat entry point delegates to the hierarchy
+    with this trivial top level.
+
+    ``inter_node_cost`` is the migration-cost multiplier for bytes that
+    cross the node boundary (DCN vs ICI); ``summary_bins`` bounds the
+    records each node contributes to the inter-node summary exchange
+    (default: the per-shard bucket count, so the exchange is
+    O(B * nodes), not O(B * devices)).
+
+    Coupling to a mesh: ``num_nodes`` MUST equal the node axis size
+    (the per-node aggregation happens on that axis — validated), while
+    ``devices_per_node`` is the per-node *part* fan-out and is
+    deliberately decoupled from the device axis size, exactly as the
+    flat path's ``num_parts`` has always been decoupled from its shard
+    count (parts are logical curve slices; only `apply_repartition`
+    requires part ids to name real shards).
+    """
+
+    num_nodes: int = 1
+    devices_per_node: int = 1
+    node_axis: str = "node"
+    device_axis: str = "device"
+    inter_node_cost: float = 4.0
+    summary_bins: int | None = None
+
+    def __post_init__(self):
+        if self.num_nodes < 1 or self.devices_per_node < 1:
+            raise ValueError(f"degenerate hierarchy: {self}")
+
+    @property
+    def num_parts(self) -> int:
+        return self.num_nodes * self.devices_per_node
+
+    def node_of_part(self, part):
+        """Node owning a (scalar or array) global part id."""
+        return part // self.devices_per_node
+
+
+class HierarchicalResult(NamedTuple):
+    """Two-level partition: everything `PartitionResult` carries, plus the
+    node level. ``part = node * devices_per_node + device`` everywhere."""
+
+    part: jax.Array            # (n,) global part per ORIGINAL element
+    node: jax.Array            # (n,) node id per ORIGINAL element
+    keys: jax.Array            # (n,) SFC key (bucket-granular on the tree path)
+    boundaries: jax.Array      # (P+1,) point-level slice starts per part
+    node_boundaries: jax.Array  # (N+1,) point-level slice starts per node
+    loads: jax.Array           # (P,) weight per part
+    node_loads: jax.Array      # (N,) weight per node
+    plan: HierarchyPlan
+    # tree-path extras (None on the point path), as in PartitionResult:
+    perm: jax.Array | None = None
+    tree: "_kdtree.LinearKdTree | None" = None
+    summary: "_kdtree.BucketSummary | None" = None
+    bucket_order: "_kdtree.BucketOrder | None" = None
+    bucket_rank: jax.Array | None = None
+    bucket_part: jax.Array | None = None   # (M,) part per tree node
+    bucket_node: jax.Array | None = None   # (M,) node per tree node
+
+
 class PartitionResult(NamedTuple):
     perm: jax.Array | None  # (n,) int32 ids in SFC order; None on the tree
     #                         path (no per-point sort ran — see
@@ -86,6 +155,43 @@ def _keys_for(points: jax.Array, cfg: PartitionerConfig) -> jax.Array:
     return fn(points, cfg.bits, stats=cfg.stats, words=cfg.words)
 
 
+def _point_order(points: jax.Array, cfg: PartitionerConfig) -> tuple[jax.Array, jax.Array]:
+    """Point-path curve order: (perm, keys). The ONE key-gen + sort
+    prelude shared by the flat and hierarchical partitions (so the
+    (1, D)-is-bit-identical invariant cannot drift)."""
+    if cfg.use_pallas and cfg.words == 1:
+        # Pallas key-gen kernels (single-word keys); same curve order as
+        # the jnp path — asserted by test_pallas_path_matches_jnp
+        keys = _keys_for(points, cfg)
+        return _sfc.argsort_keys(keys), keys
+    return _sfc.sfc_order(
+        points, curve=cfg.curve, bits=cfg.bits, stats=cfg.stats, words=cfg.words
+    )
+
+
+def _bucket_stage(
+    tree: "_kdtree.LinearKdTree",
+    points: jax.Array,
+    weights: jax.Array,
+    cfg: PartitionerConfig,
+    summary: "_kdtree.BucketSummary | None" = None,
+    frame: tuple[jax.Array, jax.Array] | None = None,
+):
+    """Tree-path prelude shared by the flat and hierarchical partitions:
+    bucket summaries keyed + SFC-sorted on one frame. Returns
+    (summary, border, w_rank, bits) with ``w_rank`` the bucket weights
+    in curve order — the knapsack input of every tree-backed slice."""
+    bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
+    if summary is None:
+        summary = _kdtree.bucket_summary(tree, points, weights)
+    if frame is None:
+        frame = (tree.bbox_lo[0], tree.bbox_hi[0])
+    border = _kdtree.bucket_order(
+        summary, frame_lo=frame[0], frame_hi=frame[1], bits=bits, curve=cfg.curve
+    )
+    return summary, border, summary.weight[border.order], bits
+
+
 def partition(
     points: jax.Array,
     weights: jax.Array | None = None,
@@ -117,15 +223,7 @@ def partition(
         )
         return partition_buckets(tree, points, weights, num_parts, cfg)
 
-    if cfg.use_pallas and cfg.words == 1:
-        # Pallas key-gen kernels (single-word keys); same curve order as
-        # the jnp path — asserted by test_pallas_path_matches_jnp
-        keys = _keys_for(points, cfg)
-        perm = _sfc.argsort_keys(keys)
-    else:
-        perm, keys = _sfc.sfc_order(
-            points, curve=cfg.curve, bits=cfg.bits, stats=cfg.stats, words=cfg.words
-        )
+    perm, keys = _point_order(points, cfg)
     w_sorted = weights[perm]
     part_sorted = _knapsack.slice_weighted_curve(w_sorted, num_parts)
     boundaries = _knapsack.part_boundaries(w_sorted, num_parts)
@@ -155,18 +253,12 @@ def partition_buckets(
     n = points.shape[0]
     if weights is None:
         weights = jnp.ones((n,), dtype=jnp.float32)
-    bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(points.shape[1])
-    if summary is None:
-        summary = _kdtree.bucket_summary(tree, points, weights)
-    if frame is None:
-        frame = (tree.bbox_lo[0], tree.bbox_hi[0])
-    border = _kdtree.bucket_order(
-        summary, frame_lo=frame[0], frame_hi=frame[1], bits=bits, curve=cfg.curve
+    summary, border, w_rank, _bits = _bucket_stage(
+        tree, points, weights, cfg, summary=summary, frame=frame
     )
     M = summary.num_nodes
     # knapsack over bucket weights in curve order (non-buckets carry 0
     # weight and sentinel keys, so they sit inert at the tail)
-    w_rank = summary.weight[border.order]
     part_rank = _knapsack.slice_weighted_curve(w_rank, num_parts)
     loads = _knapsack.part_loads(w_rank, part_rank, num_parts)
     bucket_part = jnp.zeros((M,), jnp.int32).at[border.order].set(part_rank)
@@ -193,6 +285,154 @@ def partition_buckets(
         bucket_order=border,
         bucket_rank=rank_pp,
         bucket_part=bucket_part,
+    )
+
+
+def hierarchical_partition(
+    points: jax.Array,
+    weights: jax.Array | None = None,
+    plan: HierarchyPlan = HierarchyPlan(),
+    cfg: PartitionerConfig = PartitionerConfig(use_tree=True),
+) -> HierarchicalResult:
+    """Single-process two-level partition of (n, d) points.
+
+    Two nested applications of the flat core over ONE frozen frame and
+    ONE curve order: the coarse knapsack assigns curve slices to
+    ``plan.num_nodes`` nodes, then each node's slice is independently
+    re-knapsacked into ``plan.devices_per_node`` parts
+    (`knapsack.two_level_slice`). On the tree path both levels slice the
+    same O(B) bucket weights; on the point path, the same sorted element
+    weights. With ``num_nodes == 1`` the assignment is bit-identical to
+    ``partition(..., num_parts=devices_per_node)`` — the flat partition
+    is the trivial hierarchy.
+    """
+    n, d = points.shape
+    if weights is None:
+        weights = jnp.ones((n,), dtype=jnp.float32)
+    N, D = plan.num_nodes, plan.devices_per_node
+
+    if not cfg.use_tree:
+        perm, keys = _point_order(points, cfg)
+        w_sorted = weights[perm]
+        node_s, _, part_s = _knapsack.two_level_slice(w_sorted, N, D)
+        part = jnp.zeros((n,), jnp.int32).at[perm].set(part_s)
+        node = jnp.zeros((n,), jnp.int32).at[perm].set(node_s)
+        loads = _knapsack.part_loads(w_sorted, part_s, N * D)
+        node_loads = _knapsack.part_loads(w_sorted, node_s, N)
+        bounds = _level_boundaries(part_s, N * D, n)
+        nbounds = _level_boundaries(node_s, N, n)
+        return HierarchicalResult(
+            part=part, node=node, keys=keys, boundaries=bounds,
+            node_boundaries=nbounds, loads=loads, node_loads=node_loads,
+            plan=plan, perm=perm,
+        )
+
+    tree = _kdtree.build(
+        points, weights,
+        max_depth=cfg.max_depth, bucket_size=cfg.bucket_size, splitter=cfg.splitter,
+    )
+    summary, border, w_rank, _bits = _bucket_stage(tree, points, weights, cfg)
+    return _assemble_tree_hierarchy(
+        tree, summary, border, w_rank,
+        *_knapsack.two_level_slice(w_rank, N, D), plan, n,
+    )
+
+
+def hierarchical_reslice(
+    res: HierarchicalResult,
+    weights: jax.Array,
+    *,
+    level: Literal["full", "intra"] = "full",
+) -> HierarchicalResult:
+    """Re-slice an existing two-level partition under new weights, reusing
+    the cached curve order (no key generation, no tree work, no sort).
+
+    ``level="full"`` re-runs both knapsack levels; ``level="intra"``
+    freezes the node assignment and re-knapsacks only the device slices
+    inside each node — the cheap response to small drift, whose
+    migrations are node-local by construction. Tree-path results
+    re-aggregate live point weights onto the buckets (one segment_sum);
+    point-path results re-slice the cached sorted order directly.
+    """
+    plan = res.plan
+    N, D = plan.num_nodes, plan.devices_per_node
+    n = res.part.shape[0]
+    if res.tree is None:
+        w_sorted = weights[res.perm]
+        if level == "intra":
+            node_s = res.node[res.perm]
+            dev_s = _knapsack.device_slice_within_nodes(w_sorted, node_s, N, D)
+            part_s = node_s * D + dev_s
+        else:
+            node_s, _, part_s = _knapsack.two_level_slice(w_sorted, N, D)
+        part = jnp.zeros((n,), jnp.int32).at[res.perm].set(part_s)
+        node = jnp.zeros((n,), jnp.int32).at[res.perm].set(node_s)
+        return res._replace(
+            part=part, node=node,
+            loads=_knapsack.part_loads(w_sorted, part_s, N * D),
+            node_loads=_knapsack.part_loads(w_sorted, node_s, N),
+            boundaries=_level_boundaries(part_s, N * D, n),
+            node_boundaries=_level_boundaries(node_s, N, n),
+        )
+    border = res.bucket_order
+    M = border.order.shape[0]
+    w_leaf = jax.ops.segment_sum(weights, res.tree.leaf_id, num_segments=M)
+    w_rank = w_leaf[border.order]
+    if level == "intra":
+        node_rank = res.bucket_node[border.order]
+        dev_rank = _knapsack.device_slice_within_nodes(w_rank, node_rank, N, D)
+        part_rank = node_rank * D + dev_rank
+    else:
+        node_rank, _, part_rank = _knapsack.two_level_slice(w_rank, N, D)
+    import dataclasses as _dc
+
+    summary = _dc.replace(res.summary, weight=w_leaf)
+    return _assemble_tree_hierarchy(
+        res.tree, summary, border, w_rank, node_rank, None, part_rank, plan, n
+    )
+
+
+def _level_boundaries(level_sorted: jax.Array, num: int, n: int) -> jax.Array:
+    """(num+1,) first sorted-order index of each slice (last entry = n)."""
+    starts = jnp.searchsorted(
+        level_sorted, jnp.arange(num, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return jnp.concatenate([starts, jnp.array([n], dtype=jnp.int32)])
+
+
+def _assemble_tree_hierarchy(
+    tree, summary, border, w_rank, node_rank, dev_rank, part_rank, plan, n
+) -> HierarchicalResult:
+    """Scatter rank-order two-level assignments back to tree nodes and
+    points — the shared tail of tree-path hierarchical (re)partitions."""
+    del dev_rank  # implied by part_rank
+    N, D = plan.num_nodes, plan.devices_per_node
+    M = border.order.shape[0]
+    loads = _knapsack.part_loads(w_rank, part_rank, N * D)
+    node_loads = _knapsack.part_loads(w_rank, node_rank, N)
+    bucket_part = jnp.zeros((M,), jnp.int32).at[border.order].set(part_rank)
+    bucket_node = jnp.zeros((M,), jnp.int32).at[border.order].set(node_rank)
+    part = bucket_part[tree.leaf_id]
+    node = bucket_node[tree.leaf_id]
+    rank_pp = border.rank[tree.leaf_id]
+    keys_pp = border.node_keys[tree.leaf_id]
+    first_rank = jnp.searchsorted(
+        part_rank, jnp.arange(N * D, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    boundaries = jnp.concatenate(
+        [border.starts[first_rank], jnp.array([n], dtype=jnp.int32)]
+    )
+    first_nrank = jnp.searchsorted(
+        node_rank, jnp.arange(N, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    node_boundaries = jnp.concatenate(
+        [border.starts[first_nrank], jnp.array([n], dtype=jnp.int32)]
+    )
+    return HierarchicalResult(
+        part=part, node=node, keys=keys_pp, boundaries=boundaries,
+        node_boundaries=node_boundaries, loads=loads, node_loads=node_loads,
+        plan=plan, perm=None, tree=tree, summary=summary, bucket_order=border,
+        bucket_rank=rank_pp, bucket_part=bucket_part, bucket_node=bucket_node,
     )
 
 
@@ -461,33 +701,76 @@ def _partition_fn(
 # The sample-sort above moves O(n) raw points through an all_to_all every
 # partition. The bucket path exchanges O(B) *summaries* instead: each
 # shard builds a local kd-tree once, and every (re)partition after that
-# is one all_gather of (M,) bucket keys+weights, a tiny global sort of
-# S·M bucket records, the knapsack over bucket weights, and a leaf_id
-# gather. Points never move for the computation ("point data follows its
-# bucket" — the part assignment comes home, not the points), which is
-# what makes the partition-recompute hot loop cheap (Borrell et al.'s
-# aggregated-weights argument applied across shards).
+# is a summary gather, a tiny global sort of bucket records, the knapsack
+# over bucket weights, and a leaf_id gather. Points never move for the
+# computation ("point data follows its bucket" — the part assignment
+# comes home, not the points), which is what makes the
+# partition-recompute hot loop cheap (Borrell et al.'s aggregated-weights
+# argument applied across shards).
+#
+# The exchange is HIERARCHICAL (paper's hybrid nodes-x-threads model,
+# `HierarchyPlan`): the raw (M,) summaries are all_gathered intra-node
+# only, and one inter-node exchange moves node-aggregated bins — the
+# two-stage body lives in `distributed.sharding.two_stage_bucket_slice`.
+# The flat entry points below delegate with the trivial (1, P) plan,
+# which reduces bit-exactly to the single-stage gather + flat knapsack.
 # ---------------------------------------------------------------------------
 
-def _global_bucket_slice(
-    w_leaf: jax.Array,
+def _plan_axes(mesh: jax.sharding.Mesh, plan: HierarchyPlan) -> tuple[str, ...]:
+    """Mesh axes a plan's kernels shard over. The node level is
+    validated against the mesh (aggregation runs on that axis); the
+    device level is a logical part fan-out and intentionally is not —
+    see `HierarchyPlan`."""
+    if plan.device_axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} lacks device axis {plan.device_axis!r}")
+    if plan.num_nodes > 1 or plan.node_axis in mesh.axis_names:
+        if mesh.shape.get(plan.node_axis, 1) != plan.num_nodes:
+            raise ValueError(
+                f"plan expects {plan.num_nodes} nodes on axis {plan.node_axis!r}; "
+                f"mesh has {mesh.shape.get(plan.node_axis)}"
+            )
+        return (plan.node_axis, plan.device_axis)
+    return (plan.device_axis,)
+
+
+def hierarchical_bucket_partition(
+    mesh: jax.sharding.Mesh,
+    plan: HierarchyPlan,
+    points: jax.Array,
+    weights: jax.Array,
+    cfg: PartitionerConfig = PartitionerConfig(use_tree=True),
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Cold two-level bucket-path distributed partition.
+
+    Builds a local kd-tree per shard, keys its bucket centroids on ONE
+    globally shared quantization frame (bbox all-reduced over every mesh
+    axis), and runs the nested node->device knapsack over the two-stage
+    summary exchange. Inputs are sharded on dim 0 over the plan's mesh
+    axes (node-major); returns ``(part, leaf_id, node_keys)`` with
+    ``part``/``leaf_id`` in the ORIGINAL element layout (elements do not
+    move) and ``part = node * devices_per_node + device``. ``(leaf_id,
+    node_keys)`` are the cached state that makes every later
+    `hierarchical_bucket_reslice` O(B) in communication — O(B * nodes)
+    of it inter-node.
+    """
+    return _hier_bucket_partition_fn(mesh, plan, cfg)(points, weights)
+
+
+def hierarchical_bucket_reslice(
+    mesh: jax.sharding.Mesh,
+    plan: HierarchyPlan,
+    leaf_id: jax.Array,
+    weights: jax.Array,
     node_keys: jax.Array,
-    axis: str,
-    me: jax.Array,
-    nshards: int,
-    num_parts: int,
 ) -> jax.Array:
-    """Global knapsack over all shards' bucket summaries; returns the
-    part id per LOCAL tree node. Runs inside shard_map. The only
-    collective is the all_gather of two (M,) arrays; the global sort is
-    over S·M bucket records, independent of n."""
-    M = node_keys.shape[0]
-    all_k = jax.lax.all_gather(node_keys, axis).reshape(-1)   # (S*M,)
-    all_w = jax.lax.all_gather(w_leaf, axis).reshape(-1)
-    order = jnp.argsort(all_k, stable=True)
-    part_rank = _knapsack.slice_weighted_curve(all_w[order], num_parts)
-    part_flat = jnp.zeros((nshards * M,), jnp.int32).at[order].set(part_rank)
-    return jax.lax.dynamic_slice(part_flat, (me * M,), (M,))
+    """The partition-recompute hot loop: fresh two-level assignment for
+    new weights over the cached per-shard trees.
+
+    Local work is one segment_sum (points -> bucket weights) and one
+    gather (bucket part -> point part); the communication is the
+    two-stage summary exchange — raw summaries intra-node, aggregated
+    bins inter-node. No key generation, no point sort, no all_to_all."""
+    return _hier_bucket_reslice_fn(mesh, plan)(leaf_id, weights, node_keys)
 
 
 def distributed_bucket_partition(
@@ -498,19 +781,12 @@ def distributed_bucket_partition(
     num_parts: int,
     cfg: PartitionerConfig = PartitionerConfig(use_tree=True),
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Cold bucket-path distributed partition.
-
-    Builds a local kd-tree per shard, keys its bucket centroids on ONE
-    globally shared quantization frame (all-reduced bbox), and runs the
-    global knapsack over the all_gathered bucket summaries. Inputs are
-    sharded on dim 0 over ``axis``; returns ``(part, leaf_id,
-    node_keys)`` with ``part``/``leaf_id`` in the ORIGINAL element
-    layout (elements do not move) and ``node_keys`` the (S·M,)-stacked
-    per-shard bucket keys. ``(leaf_id, node_keys)`` are the cached state
-    that makes every later `distributed_bucket_reslice` O(B) in
-    communication.
-    """
-    return _bucket_partition_fn(mesh, axis, num_parts, cfg)(points, weights)
+    """Flat bucket-path distributed partition — the hierarchy with a
+    trivial top level (``HierarchyPlan(1, num_parts, device_axis=axis)``);
+    same contract as before: ``(part, leaf_id, node_keys)`` in the
+    ORIGINAL element layout, one single-stage O(B) summary all_gather."""
+    plan = HierarchyPlan(num_nodes=1, devices_per_node=num_parts, device_axis=axis)
+    return hierarchical_bucket_partition(mesh, plan, points, weights, cfg)
 
 
 def distributed_bucket_reslice(
@@ -521,31 +797,31 @@ def distributed_bucket_reslice(
     node_keys: jax.Array,
     num_parts: int,
 ) -> jax.Array:
-    """The partition-recompute hot loop: fresh part assignment for new
-    weights over the cached per-shard trees.
-
-    Local work is one segment_sum (points → bucket weights) and one
-    gather (bucket part → point part); the only communication is the
-    O(B) summary all_gather. No key generation, no point sort, no
-    all_to_all — compare `distributed_partition`, which pays the full
-    sample-sort every call."""
-    return _bucket_reslice_fn(mesh, axis, num_parts)(leaf_id, weights, node_keys)
+    """Flat recompute hot loop — `hierarchical_bucket_reslice` with the
+    trivial (1, P) plan: one O(B) summary all_gather, no key generation,
+    no point sort, no all_to_all."""
+    plan = HierarchyPlan(num_nodes=1, devices_per_node=num_parts, device_axis=axis)
+    return hierarchical_bucket_reslice(mesh, plan, leaf_id, weights, node_keys)
 
 
 @functools.lru_cache(maxsize=64)
-def _bucket_partition_fn(
-    mesh: jax.sharding.Mesh, axis: str, num_parts: int, cfg: PartitionerConfig
+def _hier_bucket_partition_fn(
+    mesh: jax.sharding.Mesh, plan: HierarchyPlan, cfg: PartitionerConfig
 ):
     """Jitted cold bucket-partition executor (see `_reslice_fn` for why
     shard_map must run under jit)."""
-    nshards = mesh.shape[axis]
+    from repro.distributed import sharding as _shd
+
+    axes = _plan_axes(mesh, plan)
+    num_dev_shards = mesh.shape[plan.device_axis]
 
     def kernel(pts, wts):
         bits = cfg.bits if cfg.bits is not None else _sfc.max_bits_per_dim(pts.shape[1])
-        # ONE shared quantization frame: the global bbox, so every
-        # shard's bucket keys live on the same curve
-        lo = jnp.min(jax.lax.all_gather(jnp.min(pts, axis=0), axis), axis=0)
-        hi = jnp.max(jax.lax.all_gather(jnp.max(pts, axis=0), axis), axis=0)
+        # ONE shared quantization frame: the global bbox (reduced over
+        # every mesh axis), so every shard's bucket keys live on the
+        # same curve
+        lo = jnp.min(jax.lax.all_gather(jnp.min(pts, axis=0), axes), axis=0)
+        hi = jnp.max(jax.lax.all_gather(jnp.max(pts, axis=0), axes), axis=0)
         tree = _kdtree.build(
             pts,
             wts,
@@ -557,39 +833,42 @@ def _bucket_partition_fn(
         node_keys = _kdtree.summary_keys(
             summary, frame_lo=lo, frame_hi=hi, bits=bits, curve=cfg.curve
         )
-        me = jax.lax.axis_index(axis)
-        bucket_part = _global_bucket_slice(
-            summary.weight, node_keys, axis, me, nshards, num_parts
+        bucket_part = _shd.two_stage_bucket_slice(
+            summary.weight, node_keys, plan=plan, num_dev_shards=num_dev_shards
         )
         return bucket_part[tree.leaf_id], tree.leaf_id.astype(jnp.int32), node_keys
 
+    spec = P(axes)
     return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis)),
+        in_specs=(spec, spec),
+        out_specs=(spec, spec, spec),
         check_vma=False,
     ))
 
 
 @functools.lru_cache(maxsize=64)
-def _bucket_reslice_fn(mesh: jax.sharding.Mesh, axis: str, num_parts: int):
-    """Jitted bucket-reslice executor, memoized per (mesh, axis, P)."""
-    nshards = mesh.shape[axis]
+def _hier_bucket_reslice_fn(mesh: jax.sharding.Mesh, plan: HierarchyPlan):
+    """Jitted two-level bucket-reslice executor, memoized per (mesh, plan)."""
+    from repro.distributed import sharding as _shd
+
+    axes = _plan_axes(mesh, plan)
+    num_dev_shards = mesh.shape[plan.device_axis]
 
     def kernel(leaf_id, wts, node_keys):
         M = node_keys.shape[0]
         w_leaf = jax.ops.segment_sum(wts, leaf_id, num_segments=M)
-        me = jax.lax.axis_index(axis)
-        bucket_part = _global_bucket_slice(
-            w_leaf, node_keys, axis, me, nshards, num_parts
+        bucket_part = _shd.two_stage_bucket_slice(
+            w_leaf, node_keys, plan=plan, num_dev_shards=num_dev_shards
         )
         return bucket_part[leaf_id]
 
+    spec = P(axes)
     return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=P(axis),
+        in_specs=(spec, spec, spec),
+        out_specs=spec,
         check_vma=False,
     ))

@@ -93,6 +93,54 @@ def _bucket_slice_kernel(leaf_id, active, weights, order, num_parts):
     return part, loads
 
 
+@functools.partial(jax.jit, static_argnames=("num_nodes", "devices_per_node"))
+def _hier_bucket_slice_kernel(
+    leaf_id, active, weights, order, num_nodes, devices_per_node
+):
+    """Two-level tree-mode re-slice: one segment_sum onto the buckets,
+    nested node->device knapsack over the O(B) bucket weights in cached
+    curve order, gathers back through leaf_id. The full (inter-node)
+    level: node slices move too."""
+    M = order.shape[0]
+    w_leaf = jax.ops.segment_sum(
+        jnp.where(active, weights, 0.0), leaf_id, num_segments=M
+    )
+    w_rank = w_leaf[order]
+    node_rank, _, part_rank = _knapsack.two_level_slice(
+        w_rank, num_nodes, devices_per_node
+    )
+    part_by_node = jnp.zeros((M,), jnp.int32).at[order].set(part_rank)
+    node_by_node = jnp.zeros((M,), jnp.int32).at[order].set(node_rank)
+    part = jnp.where(active, part_by_node[leaf_id], -1)
+    loads = _knapsack.part_loads(w_rank, part_rank, num_nodes * devices_per_node)
+    node_loads = _knapsack.part_loads(w_rank, node_rank, num_nodes)
+    return part, loads, node_loads, node_by_node
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "devices_per_node"))
+def _hier_intra_slice_kernel(
+    leaf_id, active, weights, order, bucket_node, num_nodes, devices_per_node
+):
+    """Intra-node-only re-slice: the bucket->node assignment is FROZEN
+    (``bucket_node``), only each node's device slices are re-knapsacked —
+    every migration this step produces is node-local by construction."""
+    M = order.shape[0]
+    w_leaf = jax.ops.segment_sum(
+        jnp.where(active, weights, 0.0), leaf_id, num_segments=M
+    )
+    w_rank = w_leaf[order]
+    node_rank = bucket_node[order]
+    dev_rank = _knapsack.device_slice_within_nodes(
+        w_rank, node_rank, num_nodes, devices_per_node
+    )
+    part_rank = node_rank * devices_per_node + dev_rank
+    part_by_node = jnp.zeros((M,), jnp.int32).at[order].set(part_rank)
+    part = jnp.where(active, part_by_node[leaf_id], -1)
+    loads = _knapsack.part_loads(w_rank, part_rank, num_nodes * devices_per_node)
+    node_loads = _knapsack.part_loads(w_rank, node_rank, num_nodes)
+    return part, loads, node_loads
+
+
 @functools.partial(jax.jit, static_argnames=("num_parts",))
 def _send_counts_kernel(old_part, new_part, num_parts):
     """(P, P) migration count matrix, reduced on device (elements active
@@ -115,6 +163,10 @@ class RepartitionStep:
     loads: np.ndarray          # (P,) weight per part
     imbalance: float           # max load / mean load
     reused_keys: bool          # True iff no key generation ran this step
+    # hierarchical engines only (None on flat engines):
+    level: Literal["intra", "inter"] | None = None  # which re-slice level ran
+    node_loads: np.ndarray | None = None            # (N,) weight per node
+    node_imbalance: float | None = None
 
 
 @dataclass
@@ -128,6 +180,11 @@ class RepartitionStats:
     # and summary entries refreshed by delta scatters between rebuilds
     keygen_buckets: int = 0
     summary_refreshes: int = 0
+    # hierarchical engines: how often each re-slice level fired (an
+    # intra-node step never moves an element across nodes; an inter-node
+    # step re-slices both levels)
+    intra_reslices: int = 0
+    inter_reslices: int = 0
     history: list = field(default_factory=list)
 
 
@@ -537,15 +594,21 @@ class Repartitioner:
         mean = max(float(loads.mean()), 1e-12)
         return part, loads, float(loads.max()) / mean
 
-    def _emit(self, kind: str, part: jax.Array, loads, imbalance, reused: bool) -> RepartitionStep:
+    def _make_plan(self, counts: np.ndarray) -> _migration.MigrationPlan:
+        """Exchange-plan hook: hierarchical engines override this to emit
+        level-aware plans from the same count matrix."""
+        return _migration.plan_from_counts(counts)
+
+    def _emit(self, kind: str, part: jax.Array, loads, imbalance, reused: bool,
+              **extra) -> RepartitionStep:
         # stable elements only (active in both assignments) migrate
         counts = _send_counts_kernel(self._part, part, self.num_parts)
-        plan = _migration.plan_from_counts(np.asarray(counts))
+        plan = self._make_plan(np.asarray(counts))
         self._part = part
         self.stats.history.append((kind, float(imbalance), int(plan.total_moved)))
         return RepartitionStep(
             kind=kind, part=part, plan=plan, loads=loads,
-            imbalance=imbalance, reused_keys=reused,
+            imbalance=imbalance, reused_keys=reused, **extra,
         )
 
     # -- public stepping ------------------------------------------------------
@@ -598,6 +661,136 @@ class Repartitioner:
             timeop = float(loads.max() / max(loads.mean(), 1e-12))
         fire = self.controller.observe(timeop, int(_dyn.num_buckets(self.dps)))
         return self.rebuild() if fire else self.rebalance()
+
+
+class HierarchicalRepartitioner(Repartitioner):
+    """Two-level (node -> device) incremental engine with a two-level
+    Algorithm-3 trigger.
+
+    The flat engine answers every drift with one knapsack over the whole
+    curve — any element may move to any part, so even tiny drift can
+    cross the expensive node boundary. This engine nests the response:
+
+    * **intra-node re-slice** (the default incremental step) — the
+      bucket->node assignment is frozen; only each node's device slices
+      are re-knapsacked. Every move is node-local by construction.
+    * **inter-node re-slice** — fires only when the *node-level*
+      imbalance (max/mean node load under the frozen assignment) crosses
+      ``node_threshold``; both knapsack levels re-run and node slices
+      shift.
+    * **rebuild** — the amortized controller (paper Alg. 3) meters drift
+      exactly as in the flat engine and still decides when the tree +
+      frame must be rebuilt.
+
+    ``stats.intra_reslices`` / ``stats.inter_reslices`` count how often
+    each level fires; steps carry ``level`` / ``node_loads`` /
+    ``node_imbalance``, and migration plans are level-aware
+    (`migration.HierarchicalMigrationPlan`: per-level round capping,
+    inter-node bytes cost ``plan.inter_node_cost`` times more,
+    per-level stay fractions). Runs on the bucket substrate
+    (``cfg.use_tree`` is forced True: the hierarchy slices O(B) bucket
+    weights).
+    """
+
+    def __init__(
+        self,
+        points: jax.Array,
+        weights: jax.Array | None = None,
+        plan: _pt.HierarchyPlan = _pt.HierarchyPlan(),
+        cfg: _pt.PartitionerConfig | None = None,
+        *,
+        node_threshold: float = 1.10,
+        **kw,
+    ):
+        self.plan = plan
+        self.node_threshold = float(node_threshold)
+        self._bucket_node: jax.Array | None = None
+        self._node_loads: np.ndarray | None = None
+        cfg = cfg or _pt.PartitionerConfig(use_tree=True)
+        if not cfg.use_tree:
+            cfg = dataclasses.replace(cfg, use_tree=True)
+        super().__init__(points, weights, plan.num_parts, cfg, **kw)
+
+    # -- hierarchy accessors -------------------------------------------------
+
+    @property
+    def node_part(self) -> jax.Array:
+        """(C,) int32 node id per storage slot (-1 inactive)."""
+        return jnp.where(
+            self._part >= 0, self._part // self.plan.devices_per_node, -1
+        )
+
+    def node_imbalance(self) -> float:
+        """Node-level max/mean load of the FROZEN node assignment under
+        the live weights — the inter-node trigger's input."""
+        return self._node_state()[0]
+
+    def _node_state(self) -> tuple[float, np.ndarray]:
+        # O(B), not O(n): the live bucket weights (kept current by
+        # update_weights' re-aggregation and the insert/delete delta
+        # scatters) already hold the active point mass per bucket —
+        # aggregating them through the frozen bucket->node map costs two
+        # (M,) transfers, never a point-length one
+        w_leaf = np.asarray(self._summary.weight)
+        node_b = np.asarray(self._bucket_node)
+        loads = np.zeros(self.plan.num_nodes)
+        np.add.at(loads, node_b, w_leaf)
+        return float(loads.max() / max(loads.mean(), 1e-12)), loads
+
+    # -- level-aware slicing hooks -------------------------------------------
+
+    def _slice_current(self) -> tuple[jax.Array, np.ndarray, float]:
+        """Full two-level slice (rebuilds and inter-node re-slices):
+        refreshes the frozen bucket->node assignment."""
+        part, loads_d, node_loads_d, bucket_node = _hier_bucket_slice_kernel(
+            self.dps.leaf_id, self.dps.active, self.dps.weights,
+            self._border.order, self.plan.num_nodes, self.plan.devices_per_node,
+        )
+        self._bucket_node = bucket_node
+        self._node_loads = np.asarray(node_loads_d)
+        loads = np.asarray(loads_d)
+        return part, loads, float(loads.max()) / max(float(loads.mean()), 1e-12)
+
+    def _slice_intra(self) -> tuple[jax.Array, np.ndarray, float]:
+        part, loads_d, node_loads_d = _hier_intra_slice_kernel(
+            self.dps.leaf_id, self.dps.active, self.dps.weights,
+            self._border.order, self._bucket_node,
+            self.plan.num_nodes, self.plan.devices_per_node,
+        )
+        self._node_loads = np.asarray(node_loads_d)
+        loads = np.asarray(loads_d)
+        return part, loads, float(loads.max()) / max(float(loads.mean()), 1e-12)
+
+    def _make_plan(self, counts: np.ndarray) -> _migration.MigrationPlan:
+        return _migration.plan_from_counts(counts, hierarchy=self.plan)
+
+    def _emit(self, kind, part, loads, imbalance, reused, **extra) -> RepartitionStep:
+        if "node_loads" not in extra and self._node_loads is not None:
+            nl = self._node_loads
+            extra["node_loads"] = nl
+            extra["node_imbalance"] = float(nl.max() / max(nl.mean(), 1e-12))
+        return super()._emit(kind, part, loads, imbalance, reused, **extra)
+
+    # -- public stepping -----------------------------------------------------
+
+    def rebalance(self, level: str | None = None) -> RepartitionStep:
+        """Incremental re-slice; ``level`` forces "intra"/"inter", default
+        consults the node-level trigger."""
+        if level is None:
+            nimb, _ = self._node_state()
+            level = "inter" if nimb > self.node_threshold else "intra"
+        if level == "inter":
+            part, loads, imb = self._slice_current()
+            self.stats.inter_reslices += 1
+        elif level == "intra":
+            part, loads, imb = self._slice_intra()
+            self.stats.intra_reslices += 1
+        else:
+            raise ValueError(f"unknown re-slice level {level!r}")
+        self.stats.incremental_steps += 1
+        return self._emit(
+            "incremental", part, loads, imb, reused=True, level=level,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -686,12 +879,27 @@ class DistributedBucketRepartitioner:
     def __init__(
         self,
         mesh: jax.sharding.Mesh,
-        axis: str,
-        num_parts: int,
+        axis: str | None = None,
+        num_parts: int | None = None,
         cfg: _pt.PartitionerConfig | None = None,
+        *,
+        plan: _pt.HierarchyPlan | None = None,
     ):
-        self.mesh, self.axis = mesh, axis
-        self.num_parts = int(num_parts)
+        """Flat usage: ``(mesh, axis, num_parts)`` — internally the
+        trivial ``HierarchyPlan(1, num_parts, device_axis=axis)``.
+        Hierarchical usage: ``(mesh, plan=HierarchyPlan(N, D))`` on a 2-D
+        (node, device) mesh — the reslice hot loop then exchanges
+        node-aggregated summaries across nodes (O(B * nodes) inter-node
+        bytes instead of O(B * devices))."""
+        if plan is None:
+            if axis is None or num_parts is None:
+                raise ValueError("flat engine needs (mesh, axis, num_parts)")
+            plan = _pt.HierarchyPlan(
+                num_nodes=1, devices_per_node=int(num_parts), device_axis=axis
+            )
+        self.mesh, self.plan = mesh, plan
+        self.axis = plan.device_axis if axis is None else axis
+        self.num_parts = plan.num_parts
         # distributed trees default shallower than local ones: B buckets
         # per shard is the exchanged payload
         self.cfg = cfg or _pt.PartitionerConfig(use_tree=True, max_depth=8)
@@ -705,8 +913,8 @@ class DistributedBucketRepartitioner:
     def partition(self, points: jax.Array, weights: jax.Array) -> jax.Array:
         """Cold path: local trees + summary exchange. Caches the per-shard
         tree state for the reslice hot loop."""
-        part, leaf_id, node_keys = _pt.distributed_bucket_partition(
-            self.mesh, self.axis, points, weights, self.num_parts, cfg=self.cfg
+        part, leaf_id, node_keys = _pt.hierarchical_bucket_partition(
+            self.mesh, self.plan, points, weights, cfg=self.cfg
         )
         self.leaf_id, self.node_keys = leaf_id, node_keys
         self._part = part
@@ -716,19 +924,20 @@ class DistributedBucketRepartitioner:
 
     def rebalance(self, weights: jax.Array) -> jax.Array:
         """Hot path: new weights (original layout), same geometry — one
-        O(B) summary all_gather, no key-gen, no sort, no all_to_all."""
+        two-stage summary exchange, no key-gen, no sort, no all_to_all."""
         if self.leaf_id is None:
             raise RuntimeError("rebalance() before the first partition()")
-        part = _pt.distributed_bucket_reslice(
-            self.mesh, self.axis, self.leaf_id, weights, self.node_keys,
-            self.num_parts,
+        part = _pt.hierarchical_bucket_reslice(
+            self.mesh, self.plan, self.leaf_id, weights, self.node_keys
         )
         self._part = part
         self.reslices += 1
         return part
 
     def migration_between(self, old_part, new_part) -> _migration.MigrationPlan:
-        """Exchange plan between two original-layout assignments."""
+        """Exchange plan between two original-layout assignments —
+        level-aware when the engine's hierarchy is non-trivial."""
         return _migration.migration_plan(
-            np.asarray(old_part), np.asarray(new_part), self.num_parts
+            np.asarray(old_part), np.asarray(new_part), self.num_parts,
+            hierarchy=self.plan if self.plan.num_nodes > 1 else None,
         )

@@ -47,7 +47,7 @@ def sfc_partition(
     n: int,
     num_parts: int,
     *,
-    curve: str = "hilbert",
+    curve: str | None = None,
     weights: np.ndarray | None = None,
     cfg: "object | None" = None,
 ) -> np.ndarray:
@@ -56,15 +56,23 @@ def sfc_partition(
     Routed through ``partitioner.partition`` — SpMV rides the shared
     pipeline (Pallas key-gen kernels via ``cfg.use_pallas``, the bucket
     tree path via ``cfg.use_tree``) instead of a private key-gen →
-    argsort → knapsack copy. ``cfg`` overrides the default 16-bit
-    ``curve`` configuration wholesale."""
+    argsort → knapsack copy. ``cfg`` replaces the default 16-bit
+    configuration wholesale (including its curve), so combining it with
+    an explicit ``curve=`` is a conflict and raises — pass the curve
+    inside the cfg instead. ``curve`` alone defaults to "hilbert"."""
     from repro.core import partitioner as _pt
 
+    if cfg is not None and curve is not None:
+        raise ValueError(
+            "sfc_partition: pass either curve= or cfg=, not both — cfg "
+            f"replaces the whole configuration (cfg.curve={cfg.curve!r} "
+            f"would silently win over curve={curve!r})"
+        )
     pts = jnp.stack(
         [jnp.asarray(rows, jnp.float32), jnp.asarray(cols, jnp.float32)], axis=1
     )
     if cfg is None:
-        cfg = _pt.PartitionerConfig(curve=curve, bits=16)
+        cfg = _pt.PartitionerConfig(curve=curve or "hilbert", bits=16)
     w = None if weights is None else jnp.asarray(weights, jnp.float32)
     res = _pt.partition(pts, w, num_parts, cfg)
     return np.asarray(res.part)

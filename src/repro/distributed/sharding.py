@@ -299,6 +299,140 @@ def replicated(mesh: Mesh) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Hierarchical (node -> device) mesh helpers + two-stage summary exchange
+# ---------------------------------------------------------------------------
+
+def make_node_device_mesh(
+    num_nodes: int,
+    devices_per_node: int,
+    node_axis: str = "node",
+    device_axis: str = "device",
+) -> Mesh:
+    """2-D ``(node, device)`` mesh over the available devices — the JAX
+    rendering of the paper's hybrid model (MPI across nodes, threads
+    within one). Axis order is node-major so ``P((node, device))`` shards
+    a curve-ordered array into node-contiguous chunks."""
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((num_nodes, devices_per_node), (node_axis, device_axis))
+
+
+def two_stage_bucket_slice(
+    w_leaf: jax.Array,
+    node_keys: jax.Array,
+    *,
+    plan,
+    num_dev_shards: int,
+) -> jax.Array:
+    """Two-level global knapsack over bucket summaries; part id per LOCAL
+    tree node. Runs inside ``shard_map``; ``plan`` is a
+    `partitioner.HierarchyPlan`.
+
+    Stage 1 (intra-node): ``all_gather`` of the raw (M,) per-shard
+    summaries over the device axis only — full within-node detail, never
+    crossing the node boundary. Stage 2 (inter-node): each node compacts
+    its sorted records into ``plan.summary_bins`` (default M) equal-count
+    bins and ONE ``all_gather`` over the node axis exchanges those — the
+    inter-node payload is O(B * nodes), not O(B * devices); see
+    `summary_exchange_bytes` for the exact accounting. The nested
+    knapsack (`knapsack.two_level_slice`) then slices the bins into node
+    slices and per-node device parts, and local buckets map into the
+    result by bin boundary key. Granularity note: because a node's curve
+    slice can contain buckets resident on every other node, BOTH levels
+    slice the aggregated bins — balance granularity on this path is one
+    bin (up to ``num_dev_shards`` merged bucket records) at the node
+    and device level alike.
+
+    With ``plan.num_nodes == 1`` stage 2 vanishes and the fine knapsack
+    runs on the full stage-1 records — bit-identical to the historical
+    flat ``distributed_bucket_partition`` math, at full bucket
+    granularity.
+    """
+    from repro.core import knapsack as _knapsack
+
+    M = node_keys.shape[0]
+    N, D = plan.num_nodes, plan.devices_per_node
+    all_k = jax.lax.all_gather(node_keys, plan.device_axis).reshape(-1)
+    all_w = jax.lax.all_gather(w_leaf, plan.device_axis).reshape(-1)
+    order = jnp.argsort(all_k, stable=True)
+    k_sorted, w_sorted = all_k[order], all_w[order]
+
+    if N == 1:
+        _, _, part_rank = _knapsack.two_level_slice(w_sorted, 1, D)
+        part_flat = (
+            jnp.zeros((num_dev_shards * M,), jnp.int32).at[order].set(part_rank)
+        )
+        me = jax.lax.axis_index(plan.device_axis)
+        return jax.lax.dynamic_slice(part_flat, (me * M,), (M,))
+
+    # node-aggregate: A equal-count bins over the node-sorted records
+    # (sentinel-keyed empty records carry 0 weight and pool at the tail)
+    R = num_dev_shards * M
+    A = plan.summary_bins or M
+    bin_id = (jnp.arange(R, dtype=jnp.int32) * A) // R
+    bin_w = jax.ops.segment_sum(w_sorted, bin_id, num_segments=A)
+    # bin b's FIRST record is the smallest i with (i*A)//R == b, i.e.
+    # ceil(b*R/A) — floor lands on the last record of bin b-1 whenever A
+    # does not divide R, mis-keying the boundary
+    bin_first = (jnp.arange(A, dtype=jnp.int32) * R + A - 1) // A
+    bin_k = k_sorted[bin_first]
+    gk = jax.lax.all_gather(bin_k, plan.node_axis).reshape(-1)     # (N*A,)
+    gw = jax.lax.all_gather(bin_w, plan.node_axis).reshape(-1)
+    gorder = jnp.argsort(gk, stable=True)
+    gk_s = gk[gorder]
+    _, _, part_bin = _knapsack.two_level_slice(gw[gorder], N, D)
+    # local buckets inherit the part of the last bin whose first key is
+    # <= their key (parts are non-decreasing along the sorted bins)
+    idx = jnp.clip(
+        jnp.searchsorted(gk_s, node_keys, side="right").astype(jnp.int32) - 1,
+        0, N * A - 1,
+    )
+    return part_bin[idx]
+
+
+def summary_exchange_bytes(
+    plan,
+    buckets_per_shard: int,
+    *,
+    bytes_per_record: int = 8,
+) -> dict:
+    """Exact inter-node byte accounting of one summary exchange (the
+    reslice hot loop's only communication). A record is one bucket's
+    (uint32 key, float32 weight).
+
+    * **flat** — one all_gather over all ``N*D`` shards: every device
+      ingests every remote shard's raw records.
+    * **two_level** — stage 1 is intra-node (0 inter-node bytes); stage 2
+      ingests the remote nodes' aggregated bins only.
+
+    This is the closed-form *model*; the benchmark gate
+    (`benchmarks/bench_hierarchy.py --smoke`) measures the same quantity
+    from the compiled programs' replica groups
+    (`launch.dryrun.parse_inter_node_bytes`) and holds
+    ``two_level < flat`` against that measurement, with this model
+    reported alongside for drift visibility.
+    """
+    N, D = plan.num_nodes, plan.devices_per_node
+    M = int(buckets_per_shard)
+    A = plan.summary_bins or M
+    # per-device delivery convention — the one parse_inter_node_bytes
+    # measures: every device of a gather's replica group receives each
+    # remote member's operand. Flat: all N*D devices each ingest the
+    # (N-1)*D remote shards' M records. Two-level: the node-axis gather
+    # runs once per device column, so all N*D devices each ingest the
+    # (N-1) remote nodes' A bins. Ratio: D*M/A (= D at the default A=M).
+    flat = N * D * (N - 1) * D * M * bytes_per_record
+    two_level = N * D * (N - 1) * A * bytes_per_record
+    return {
+        "flat_inter_node_bytes": int(flat),
+        "two_level_inter_node_bytes": int(two_level),
+        "intra_node_bytes": int(N * D * (D - 1) * M * bytes_per_record),
+        "records_per_shard": M,
+        "bins_per_node": int(A),
+    }
+
+
+# ---------------------------------------------------------------------------
 # dynamic element placement (repartitioning engine integration)
 # ---------------------------------------------------------------------------
 
@@ -389,6 +523,57 @@ def _exchange(x, axis):
     return r.reshape((-1,) + r.shape[2:])
 
 
+def _answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap):
+    """Exact point location of routed queries against the local chunk;
+    (r, 3) int32 columns (found, id, ok). Shared by the flat and
+    two-level serving kernels."""
+    n_loc = keys_loc.shape[0]
+    lo_i = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
+    hi_i = jnp.searchsorted(keys_loc, rqk, side="right").astype(jnp.int32)
+    offs = jnp.arange(bucket_cap, dtype=jnp.int32)
+    pos = lo_i[:, None] + offs[None, :]
+    cand = jnp.clip(pos, 0, n_loc - 1)
+    hit = jnp.all(pts_loc[cand] == rq[:, None, :], axis=-1) & (pos < hi_i[:, None])
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)
+    gid = ids_loc[cand[jnp.arange(rq.shape[0]), slot]]
+    # a key-run can extend backwards into the previous chunk (the owner
+    # is the LAST chunk whose first key <= qk, so forward extension is
+    # impossible): flag those misses as uncertified
+    edge = (lo_i == 0) & (keys_loc[0] == rqk)
+    ok = found | (((hi_i - lo_i) <= bucket_cap) & ~edge)
+    return jnp.stack(
+        [found.astype(jnp.int32), jnp.where(found, gid, -1), ok.astype(jnp.int32)],
+        axis=-1,
+    )
+
+
+def _answer_knn(pts_loc, ids_loc, keys_loc, rq, rqk, k, win):
+    """kNN candidate-window scan of routed queries against the local
+    chunk; distances + bit-cast ids packed into one (r, 2k) reply buffer
+    so each serving round stays at one reply exchange per routing hop."""
+    from repro.core import curve_index as _ci
+
+    n_loc = keys_loc.shape[0]
+    pos0 = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
+    start = jnp.clip(pos0 - win // 2, 0, jnp.maximum(n_loc - win, 0))
+    offs = jnp.arange(win, dtype=jnp.int32)
+    pos = start[:, None] + offs[None, :]
+    cand = jnp.clip(pos, 0, n_loc - 1)
+    # pos < n_loc: when win exceeds the chunk, clipped indices repeat —
+    # without the bound one point could fill several of the k slots
+    valid = (pos < n_loc) & (keys_loc[cand] != jnp.uint32(_ci.KEY_SENTINEL))
+    d2 = jnp.sum((pts_loc[cand] - rq[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    neg_top, top_i = jax.lax.top_k(-d2, k)
+    gids = ids_loc[jnp.take_along_axis(cand, top_i, axis=1)]
+    gids = jnp.where(jnp.isfinite(-neg_top), gids, -1)
+    dist = jnp.sqrt(jnp.maximum(-neg_top, 0.0))
+    return jnp.concatenate(
+        [dist, jax.lax.bitcast_convert_type(gids, jnp.float32)], axis=1
+    )
+
+
 @functools.lru_cache(maxsize=32)
 def _query_serve_fn(
     mesh: Mesh,
@@ -408,16 +593,11 @@ def _query_serve_fn(
     nshards = mesh.shape[axis]
 
     def kernel(pts_loc, ids_loc, keys_loc, q_loc, flo, fhi):
-        n_loc = keys_loc.shape[0]
         qcap = q_loc.shape[0]
         qk = _ci.keys_in_frame(q_loc, flo, fhi, bits=bits, curve=curve)
         # owner shard: last shard whose first key <= qk
         firsts = jax.lax.all_gather(keys_loc[0], axis)          # (nshards,)
-        owner = jnp.clip(
-            jnp.searchsorted(firsts, qk, side="right").astype(jnp.int32) - 1,
-            0,
-            nshards - 1,
-        )
+        owner = _ci.owner_from_firsts(firsts, qk)
         (buf_q,), pos_of = _migration.stage_rows_by_dest(
             owner, (q_loc,), nshards, qcap, (0.0,)
         )
@@ -435,47 +615,8 @@ def _query_serve_fn(
             return back[owner, pos_of]
 
         if mode == "pl":
-            lo_i = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
-            hi_i = jnp.searchsorted(keys_loc, rqk, side="right").astype(jnp.int32)
-            offs = jnp.arange(bucket_cap, dtype=jnp.int32)
-            pos = lo_i[:, None] + offs[None, :]
-            cand = jnp.clip(pos, 0, n_loc - 1)
-            hit = jnp.all(pts_loc[cand] == rq[:, None, :], axis=-1) & (pos < hi_i[:, None])
-            found = jnp.any(hit, axis=1)
-            slot = jnp.argmax(hit, axis=1)
-            gid = ids_loc[cand[jnp.arange(rq.shape[0]), slot]]
-            # a key-run can extend backwards into the previous shard (the
-            # owner is the LAST shard whose first key <= qk, so forward
-            # extension is impossible): flag those misses as uncertified
-            edge = (lo_i == 0) & (keys_loc[0] == rqk)
-            ok = found | (((hi_i - lo_i) <= bucket_cap) & ~edge)
-            ans = jnp.stack(
-                [found.astype(jnp.int32), jnp.where(found, gid, -1), ok.astype(jnp.int32)],
-                axis=-1,
-            )                                                    # (r, 3)
-            return reply(ans)
-
-        # kNN: candidate window around the insertion point on the chunk
-        pos0 = jnp.searchsorted(keys_loc, rqk, side="left").astype(jnp.int32)
-        start = jnp.clip(pos0 - win // 2, 0, jnp.maximum(n_loc - win, 0))
-        offs = jnp.arange(win, dtype=jnp.int32)
-        pos = start[:, None] + offs[None, :]
-        cand = jnp.clip(pos, 0, n_loc - 1)
-        # pos < n_loc: when win exceeds the chunk, clipped indices repeat —
-        # without the bound one point could fill several of the k slots
-        valid = (pos < n_loc) & (keys_loc[cand] != jnp.uint32(_ci.KEY_SENTINEL))
-        d2 = jnp.sum((pts_loc[cand] - rq[:, None, :]) ** 2, axis=-1)
-        d2 = jnp.where(valid, d2, jnp.inf)
-        neg_top, top_i = jax.lax.top_k(-d2, k)
-        gids = ids_loc[jnp.take_along_axis(cand, top_i, axis=1)]
-        gids = jnp.where(jnp.isfinite(-neg_top), gids, -1)
-        dist = jnp.sqrt(jnp.maximum(-neg_top, 0.0))
-        # distances + bit-cast ids share one (r, 2k) reply buffer: the
-        # whole kNN round stays at two all_to_all exchanges
-        packed = jnp.concatenate(
-            [dist, jax.lax.bitcast_convert_type(gids, jnp.float32)], axis=1
-        )
-        got = reply(packed)                                      # (qcap, 2k)
+            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap))
+        got = reply(_answer_knn(pts_loc, ids_loc, keys_loc, rq, rqk, k, win))
         return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32)
 
     out_specs = P(axis) if mode == "pl" else (P(axis), P(axis))
@@ -488,9 +629,96 @@ def _query_serve_fn(
     ))
 
 
+@functools.lru_cache(maxsize=32)
+def _query_serve_fn_2d(
+    mesh: Mesh,
+    node_axis: str,
+    device_axis: str,
+    mode: str,          # "pl" | "knn"
+    k: int,
+    bucket_cap: int,
+    win: int,
+    bits: int,
+    curve: str,
+):
+    """Two-level (key -> node -> device) query-serving executor.
+
+    The flat kernel routes every query through one all_to_all whose lanes
+    span all ``N*D`` shards — every mis-owned query may cross the node
+    boundary. Here routing is hierarchical, mirroring the directory:
+
+      1. **inter-node hop** — owner *node* by binary search over the N
+         node first-keys; one all_to_all over the node axis (N lanes).
+         Queries already on their owner node ride the self-lane, which
+         never leaves the node.
+      2. **node-local lookup** — ON the owner node, the owner *device*
+         by search over the node's D device first-keys; one all_to_all
+         over the device axis only. This stage (and its reply) is pure
+         intra-node traffic.
+
+    Answers retrace both hops through the mirrored-lane gathers, so slot
+    ids never travel. Owner shards are identical to the flat kernel's
+    (`curve_index.owner_from_firsts` applied per level over globally
+    sorted firsts), hence so are the answers.
+    """
+    from repro.core import curve_index as _ci
+    from repro.core import migration as _migration
+
+    s_node = mesh.shape[node_axis]
+    s_dev = mesh.shape[device_axis]
+    axes = (node_axis, device_axis)
+
+    def kernel(pts_loc, ids_loc, keys_loc, q_loc, flo, fhi):
+        qcap = q_loc.shape[0]
+        qk = _ci.keys_in_frame(q_loc, flo, fhi, bits=bits, curve=curve)
+        firsts_dev = jax.lax.all_gather(keys_loc[0], device_axis)   # (S_d,) my node
+        node_firsts = jax.lax.all_gather(firsts_dev[0], node_axis)  # (S_n,)
+        # --- hop 1: inter-node (N lanes; self-lane stays on-node) ---------
+        owner_node = _ci.owner_from_firsts(node_firsts, qk)
+        (buf_q,), pos_a = _migration.stage_rows_by_dest(
+            owner_node, (q_loc,), s_node, qcap, (0.0,)
+        )
+        rq1 = _exchange(buf_q, node_axis)                   # (S_n*qcap, d)
+        rqk1 = _ci.keys_in_frame(rq1, flo, fhi, bits=bits, curve=curve)
+        # --- hop 2: node-local device lookup (intra-node only) ------------
+        owner_dev = _ci.owner_from_firsts(firsts_dev, rqk1)
+        cap2 = s_node * qcap
+        (buf2,), pos_b = _migration.stage_rows_by_dest(
+            owner_dev, (rq1,), s_dev, cap2, (0.0,)
+        )
+        rq = _exchange(buf2, device_axis)                   # (S_d*cap2, d)
+        rqk = _ci.keys_in_frame(rq, flo, fhi, bits=bits, curve=curve)
+
+        def reply(ans):                                     # (S_d*cap2, c) -> (qcap, c)
+            back_b = jax.lax.all_to_all(
+                ans.reshape(s_dev, cap2, -1), device_axis,
+                split_axis=0, concat_axis=0, tiled=False,
+            )[owner_dev, pos_b]                             # (cap2, c) on owner node
+            back_a = jax.lax.all_to_all(
+                back_b.reshape(s_node, qcap, -1), node_axis,
+                split_axis=0, concat_axis=0, tiled=False,
+            )
+            return back_a[owner_node, pos_a]                # (qcap, c)
+
+        if mode == "pl":
+            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap))
+        got = reply(_answer_knn(pts_loc, ids_loc, keys_loc, rq, rqk, k, win))
+        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32)
+
+    spec = P(axes)
+    out_specs = spec if mode == "pl" else (spec, spec)
+    return jax.jit(_compat.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec, P(), P()),
+        out_specs=out_specs,
+        check_vma=False,
+    ))
+
+
 def serve_point_location(
     mesh: Mesh,
-    axis: str,
+    axis: "str | tuple[str, str]",
     pts_s: jax.Array,
     ids_s: jax.Array,
     keys_s: jax.Array,
@@ -502,16 +730,22 @@ def serve_point_location(
     curve: str = "morton",
     bucket_cap: int = 64,
 ) -> jax.Array:
-    """Distributed exact point location. ``queries`` (Q, d) sharded
-    P(axis), Q divisible by the axis size; returns (Q, 3) int32 columns
-    (found, id, ok)."""
-    fn = _query_serve_fn(mesh, axis, "pl", 0, bucket_cap, 0, bits, curve)
+    """Distributed exact point location. ``queries`` (Q, d) sharded over
+    ``axis``, Q divisible by the shard count; returns (Q, 3) int32
+    columns (found, id, ok). A ``(node_axis, device_axis)`` tuple routes
+    hierarchically (key -> node -> device; see `_query_serve_fn_2d`) —
+    answers are identical to the flat routing on the same chunk layout.
+    """
+    if isinstance(axis, tuple):
+        fn = _query_serve_fn_2d(mesh, *axis, "pl", 0, bucket_cap, 0, bits, curve)
+    else:
+        fn = _query_serve_fn(mesh, axis, "pl", 0, bucket_cap, 0, bits, curve)
     return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)
 
 
 def serve_knn(
     mesh: Mesh,
-    axis: str,
+    axis: "str | tuple[str, str]",
     pts_s: jax.Array,
     ids_s: jax.Array,
     keys_s: jax.Array,
@@ -525,6 +759,11 @@ def serve_knn(
     win: int = 192,
 ) -> tuple[jax.Array, jax.Array]:
     """Distributed approximate kNN over the sharded curve. Returns
-    ((Q, k) distances, (Q, k) ids), invalid slots inf/-1."""
-    fn = _query_serve_fn(mesh, axis, "knn", k, 0, win, bits, curve)
+    ((Q, k) distances, (Q, k) ids), invalid slots inf/-1. A
+    ``(node_axis, device_axis)`` tuple routes hierarchically, as in
+    `serve_point_location`."""
+    if isinstance(axis, tuple):
+        fn = _query_serve_fn_2d(mesh, *axis, "knn", k, 0, win, bits, curve)
+    else:
+        fn = _query_serve_fn(mesh, axis, "knn", k, 0, win, bits, curve)
     return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)

@@ -68,6 +68,72 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+
+
+def parse_inter_node_bytes(hlo_text: str, node_of) -> dict:
+    """Classify every collective's traffic as intra- vs inter-node from
+    optimized (per-device) HLO. ``node_of`` maps global device id ->
+    node id (e.g. ``[g // D for g in range(N * D)]`` for a node-major
+    (N, D) mesh).
+
+    For each collective replica group, every member receives one
+    per-peer operand chunk from every other member; chunks whose sender
+    sits on a different node are inter-node bytes. This measures the
+    *compiled program* — the gate in ``benchmarks/bench_hierarchy.py``
+    uses it so an aggregation regression in the exchange kernels fails
+    CI even though the analytic accounting formula would not notice.
+
+    Conservative on fused/async variants: ``*-done`` lines are skipped
+    (their ``*-start`` carries the shape) and unknown group syntax is
+    counted in ``unparsed``.
+    """
+    inter = 0
+    intra = 0
+    ops = 0
+    unparsed = 0
+    for line in hlo_text.splitlines():
+        coll = next(
+            (c for c in _COLLECTIVES
+             if f" {c}(" in line or f" {c}-start(" in line),
+            None,
+        )
+        if coll is None:
+            continue
+        m = _GROUPS_RE.search(line)
+        if not m:
+            unparsed += 1
+            continue
+        groups = [
+            [int(x) for x in grp.split(",")]
+            for grp in m.group(1)[1:-1].split("},{")
+        ]
+        lhs = line.split(f" {coll}", 1)[0]
+        shapes = _SHAPE_RE.findall(lhs)
+        res_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        gsize = max(len(groups[0]), 1)
+        if coll in ("all-gather", "all-to-all"):
+            per_peer = res_bytes // gsize
+        else:  # all-reduce / reduce-scatter / collective-permute: one
+            per_peer = res_bytes  # operand per peer exchange (lower bound)
+        ops += 1
+        for grp in groups:
+            for p in grp:
+                for q in grp:
+                    if q == p:
+                        continue
+                    if node_of[q] != node_of[p]:
+                        inter += per_peer
+                    else:
+                        intra += per_peer
+    return {
+        "inter_node_bytes": inter,
+        "intra_node_bytes": intra,
+        "collectives": ops,
+        "unparsed": unparsed,
+    }
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Sum *operand* bytes of every collective op, tracking while-loop trip
     counts so collectives inside scanned layers are multiplied out.

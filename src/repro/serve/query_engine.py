@@ -70,13 +70,20 @@ class DistributedQueryEngine:
     >>> found, ids, ok = eng.point_location(q)
     >>> rp.insert(new_pts, new_wts)                # geometry changed
     >>> eng.maybe_refresh(rp)                      # live index swap
+
+    On a 2-D (node, device) mesh, pass ``axis=("node", "device")``: the
+    index shards node-major over both axes and queries route through the
+    hierarchical two-level directory (key -> node -> device) — the
+    inter-node all_to_all carries N lanes instead of N*D, and the
+    device-level lookup plus its reply never leave the owner node.
+    Answers are identical to flat routing on the same chunk layout.
     """
 
     def __init__(
         self,
         index: _ci.CurveIndex,
         mesh: jax.sharding.Mesh | None = None,
-        axis: str = "data",
+        axis: "str | tuple[str, str]" = "data",
         *,
         bucket_cap: int = 64,
         cutoff_buckets: int = 1,
@@ -122,7 +129,7 @@ class DistributedQueryEngine:
         self.stats.index_swaps += 1
         if self.mesh is None:
             return
-        nsh = self.mesh.shape[self.axis]
+        nsh = self._num_shards()
         n = index.capacity
         n_pad = -(-n // nsh) * nsh
         pts = index.points
@@ -204,11 +211,20 @@ class DistributedQueryEngine:
         self.stats.queries_served += int(queries.shape[0])
         return out
 
+    def _num_shards(self) -> int:
+        """Total chunk count: product of the serving axes' sizes (one
+        axis flat, node x device hierarchical)."""
+        axes = self.axis if isinstance(self.axis, tuple) else (self.axis,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
     def _pad_shard(self, queries: jax.Array) -> tuple[jax.Array, int]:
-        """Pad the batch to a multiple of the axis size and shard it.
+        """Pad the batch to a multiple of the shard count and shard it.
         Pad rows route like real queries and are sliced off on return —
         lane capacity equals the local count, so they can't evict one."""
-        nsh = self.mesh.shape[self.axis]
+        nsh = self._num_shards()
         nq = queries.shape[0]
         n_pad = -(-nq // nsh) * nsh
         if n_pad != nq:

@@ -1,0 +1,128 @@
+"""Level-aware migration planning over block-structured count matrices.
+
+`plan_from_counts(hierarchy=...)` treats the (P, P) count matrix as
+N x N blocks of D x D (``part = node * D + device``): diagonal blocks
+ride the intra-node fabric, off-block entries cross nodes. Properties
+run through the hypothesis compat shim (fixed examples in bare
+containers)."""
+import numpy as np
+
+from repro.core import migration
+from repro.core.partitioner import HierarchyPlan
+
+from _hypothesis_compat import given, settings, strategies as st
+
+
+def _block_counts(rng: np.random.Generator, nodes: int, dpn: int,
+                  intra_scale: int, inter_scale: int) -> np.ndarray:
+    """Node-grouped matrix: heavy diagonal blocks (intra-node churn),
+    lighter off-block mass (cross-node drift) — the shape a two-level
+    re-slice produces."""
+    P = nodes * dpn
+    node_of = np.arange(P) // dpn
+    same = node_of[:, None] == node_of[None, :]
+    send = rng.integers(0, max(inter_scale, 1), (P, P))
+    send[same] = rng.integers(0, max(intra_scale, 1), (P, P))[same]
+    np.fill_diagonal(send, rng.integers(0, 10 * max(intra_scale, 1), P))
+    return send.astype(np.int64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nodes=st.integers(1, 4),
+    dpn=st.integers(1, 4),
+    intra=st.integers(1, 5000),
+    inter=st.integers(1, 5000),
+    seed=st.integers(0, 10),
+)
+def test_hierarchical_plan_conserves_and_classifies(nodes, dpn, intra, inter, seed):
+    rng = np.random.default_rng(seed)
+    send = _block_counts(rng, nodes, dpn, intra, inter)
+    hier = HierarchyPlan(nodes, dpn)
+    plan = migration.plan_from_counts(send, hierarchy=hier)
+    flat = migration.plan_from_counts(send)
+    # conservation: every off-diagonal element is exactly one of
+    # intra-node or inter-node, never both, never dropped
+    assert plan.intra_moved + plan.inter_moved == flat.total_moved
+    assert plan.total_moved == flat.total_moved
+    stay = np.trace(send)
+    assert plan.intra_moved + plan.inter_moved + stay == send.sum()
+    # per-level stay fractions bracket correctly
+    assert 0.0 <= plan.stay_fraction <= plan.stay_fraction_node <= 1.0
+    # with one node there IS no inter level
+    if nodes == 1:
+        assert plan.inter_moved == 0 and plan.inter_rounds == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nodes=st.integers(2, 4),
+    dpn=st.integers(1, 4),
+    max_msg=st.integers(64, 4096),
+    seed=st.integers(0, 10),
+)
+def test_per_level_round_counts_are_exact(nodes, dpn, max_msg, seed):
+    rng = np.random.default_rng(seed)
+    send = _block_counts(rng, nodes, dpn, 3000, 800)
+    hier = HierarchyPlan(nodes, dpn, inter_node_cost=2.0)
+    plan = migration.plan_from_counts(
+        send, hierarchy=hier, max_msg_bytes=max_msg, bytes_per_elem=16
+    )
+    # round capping is applied per level against each level's own chunk
+    chunk = max(1, max_msg // 16)
+    inter_chunk = max(1, int(max_msg / (16 * 2.0)))
+    assert plan.chunk == chunk and plan.inter_chunk == inter_chunk
+    exp_intra = -(-plan.max_intra_pair // chunk) if plan.max_intra_pair else 0
+    exp_inter = -(-plan.max_inter_pair // inter_chunk) if plan.max_inter_pair else 0
+    assert plan.intra_rounds == exp_intra
+    assert plan.inter_rounds == exp_inter
+    assert plan.rounds == max(exp_intra, exp_inter)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 20),
+    lo=st.floats(1.0, 4.0),
+)
+def test_inter_node_cost_monotonicity(seed, lo):
+    """Raising the inter-node cost multiplier can only increase the
+    weighted cost and the inter-node round count, and touches neither
+    the classification nor the intra level."""
+    rng = np.random.default_rng(seed)
+    send = _block_counts(rng, 2, 4, 2000, 1500)
+    hier = HierarchyPlan(2, 4)
+    plans = [
+        migration.plan_from_counts(
+            send, hierarchy=hier, inter_node_cost=m, max_msg_bytes=1 << 14
+        )
+        for m in (lo, 2 * lo, 8 * lo)
+    ]
+    costs = [p.cost() for p in plans]
+    rounds = [p.inter_rounds for p in plans]
+    assert costs == sorted(costs)
+    if plans[0].inter_moved > 0:
+        assert costs[0] < costs[-1]  # strictly: inter bytes exist
+        assert rounds[0] <= rounds[-1]
+    for p in plans:
+        assert p.intra_rounds == plans[0].intra_rounds
+        assert p.intra_moved == plans[0].intra_moved
+        assert p.inter_moved == plans[0].inter_moved
+
+
+def test_flat_plan_unchanged_without_hierarchy():
+    """No hierarchy -> the historical MigrationPlan, byte-for-byte."""
+    send = np.array([[5, 2], [3, 7]], np.int64)
+    plan = migration.plan_from_counts(send, max_msg_bytes=32, bytes_per_elem=16)
+    assert isinstance(plan, migration.MigrationPlan)
+    assert plan.total_moved == 5 and plan.max_pair == 3
+    assert plan.chunk == 2 and plan.rounds == 2
+
+
+def test_hierarchy_shape_mismatch_raises():
+    send = np.zeros((6, 6), np.int64)
+    try:
+        migration.plan_from_counts(send, hierarchy=HierarchyPlan(2, 4))
+    except ValueError as e:
+        assert "8 parts" in str(e)
+    else:
+        raise AssertionError("shape mismatch accepted")

@@ -23,6 +23,22 @@ def test_sfc_load_balance_near_perfect(graph):
     assert m["MaxLoad"] - m["AvgLoad"] <= 2  # knapsack guarantee, unit weights
 
 
+def test_sfc_partition_curve_cfg_conflict_raises(graph):
+    """Regression: an explicit ``cfg`` replaces the configuration
+    wholesale, so a simultaneous explicit ``curve=`` used to be silently
+    ignored — now it is a hard conflict. Each argument alone still works
+    (and cfg alone carries its own curve)."""
+    from repro.core import partitioner as pt
+
+    src, dst = graph
+    cfg = pt.PartitionerConfig(curve="morton", bits=16)
+    with pytest.raises(ValueError, match="not both"):
+        spmv.sfc_partition(src, dst, 3000, 4, curve="hilbert", cfg=cfg)
+    a = spmv.sfc_partition(src, dst, 3000, 4, curve="morton")
+    b = spmv.sfc_partition(src, dst, 3000, 4, cfg=cfg)
+    np.testing.assert_array_equal(a, b)
+
+
 def test_rowwise_has_full_degree(graph):
     """Paper Tables II/IV/VI: row-wise MaxDegree == P-1."""
     src, dst = graph
