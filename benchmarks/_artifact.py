@@ -19,12 +19,18 @@ import platform
 import time
 
 
-def write_artifact(name: str, metrics: dict, *, passed: bool | None = None) -> str:
+def write_artifact(
+    name: str, metrics: dict, *, passed: bool | None = None, echo: bool = False
+) -> str:
     """Write ``BENCH_<name>.json`` and return its path.
 
     ``metrics`` values must be JSON-serializable scalars (floats in
     seconds/bytes/ratios as measured); ``passed`` records the smoke
-    gate's verdict when the suite has one.
+    gate's verdict when the suite has one. ``echo=True`` prints the
+    whole summary as one ``BENCH_<name>.json {...}`` stdout line —
+    every ``--smoke`` entrypoint emits this as its FINAL line so CI and
+    the trajectory tooling can scrape the numbers from the log even
+    when the artifact files are not downloaded.
     """
     payload = {
         "name": name,
@@ -40,4 +46,6 @@ def write_artifact(name: str, metrics: dict, *, passed: bool | None = None) -> s
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
+    if echo:
+        print(f"BENCH_{name}.json {json.dumps(payload, sort_keys=True)}", flush=True)
     return path

@@ -1,0 +1,198 @@
+"""AMR mesh workload: distributed stencil correctness + incremental
+re-slice economics on the closed partition loop.
+
+The claims under test (paper §I "dynamic applications" + §IV):
+
+* **correctness** — the distributed stencil (halo exchange over compiled
+  send/recv plans, state migrated between partitions on device) is
+  BIT-EQUAL to the single-device reference after the full simulation,
+  including >= 3 repartition events and the AMR refine/coarsen steps in
+  between. Equality is exact (``np.array_equal``), not a tolerance.
+* **economics** — answering load drift with the hierarchical engine's
+  incremental re-slice plus moved-rows-only (node-local when certified)
+  migration must beat a full rebuild plus full redistribute on measured
+  walltime, on the same trajectory, same devices, warm executors.
+
+``--smoke`` (nightly CI) runs at 8 fake host devices arranged 2 nodes x
+4 devices, gates both claims, writes ``BENCH_mesh.json`` and prints the
+summary as the final stdout line. Runs each driver twice and times the
+second pass so jit compiles (shared through the lru-cached executors)
+don't pollute the comparison.
+
+    PYTHONPATH=src python benchmarks/bench_mesh.py [events] [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+SMOKE = "--smoke" in sys.argv
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # fake devices must be requested before jax initializes; under
+    # run.py the flag must NOT leak into single-device suites, so rows
+    # report SKIPPED there unless devices already exist
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:  # run as a script: the benchmarks dir itself is on sys.path
+    from _artifact import write_artifact
+
+_argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+EVENTS = int(_argv[0]) if _argv else 12
+NODES, DEV = 2, 4
+
+
+def _config():
+    from repro.mesh import simulate
+
+    return simulate.SimConfig(
+        events=EVENTS,
+        amr_every=3,
+        substeps=2,
+        base_level=4,
+        max_level=6,
+        x0=0.15,
+        x1=0.85,
+    )
+
+
+def _run(events_cfg=None):
+    import jax
+
+    from repro.core import partitioner as pt
+    from repro.distributed import sharding as shd
+    from repro.mesh import simulate
+
+    nshards = NODES * DEV
+    if len(jax.devices()) < nshards:
+        return [(f"mesh/SKIPPED(<{nshards} devices)", 0.0, "")], None
+
+    cfg = events_cfg or _config()
+    events = simulate.build_trajectory(cfg)
+    u0 = simulate.initial_field(events[0].mesh, cfg)
+    t0 = time.perf_counter()
+    uref = simulate.run_reference(events, u0, cfg.substeps)
+    ref_s = time.perf_counter() - t0
+
+    hplan = pt.HierarchyPlan(num_nodes=NODES, devices_per_node=DEV)
+    mesh = shd.make_node_device_mesh(NODES, DEV)
+
+    results = {}
+    for driver in ("incremental", "rebuild"):
+        # two passes: executors are lru-cached, the second is warm
+        for _ in range(2):
+            u, st = simulate.run_distributed(
+                events, u0, cfg.substeps, mesh, hplan, driver=driver, cfg=cfg
+            )
+        results[driver] = (u, st)
+
+    inc, reb = results["incremental"][1], results["rebuild"][1]
+    bit_inc = bool(np.array_equal(uref, results["incremental"][0]))
+    bit_reb = bool(np.array_equal(uref, results["rebuild"][0]))
+    t_inc = inc.engine_s + inc.move_s
+    t_reb = reb.engine_s + reb.move_s
+
+    rows = [
+        (
+            f"mesh/reference/n={inc.cells_final}", ref_s * 1e6,
+            f"events={len(events)};substeps={cfg.substeps}",
+        ),
+        (
+            "mesh/incremental_reslice+migrate", t_inc * 1e6,
+            f"bit_equal={bit_inc};repart_events={inc.repartition_events};"
+            f"intra={inc.intra_reslices};node_local_moves={inc.node_local_moves}",
+        ),
+        (
+            "mesh/rebuild+redistribute", t_reb * 1e6,
+            f"bit_equal={bit_reb};rebuilds={reb.rebuilds};"
+            f"speedup={t_reb / max(t_inc, 1e-9):.1f}x",
+        ),
+    ]
+    hm = inc.halo_metrics
+    stats = {
+        "events": len(events),
+        "substeps": cfg.substeps,
+        "nodes": NODES,
+        "devices_per_node": DEV,
+        "cells_final": inc.cells_final,
+        "bit_equal_incremental": bit_inc,
+        "bit_equal_rebuild": bit_reb,
+        "repartition_events": inc.repartition_events,
+        "amr_events": inc.amr_events,
+        "intra_reslices": inc.intra_reslices,
+        "inter_reslices": inc.inter_reslices,
+        "incremental_rebuilds": inc.rebuilds,
+        "node_local_moves": inc.node_local_moves,
+        "moved_total_incremental": inc.moved_total,
+        "moved_inter_node_incremental": inc.moved_inter_node,
+        "moved_total_rebuild": reb.moved_total,
+        "incremental_engine_s": inc.engine_s,
+        "incremental_move_s": inc.move_s,
+        "incremental_stencil_s": inc.stencil_s,
+        "rebuild_engine_s": reb.engine_s,
+        "rebuild_move_s": reb.move_s,
+        "rebuild_stencil_s": reb.stencil_s,
+        "incremental_total_s": t_inc,
+        "rebuild_total_s": t_reb,
+        "speedup": t_reb / max(t_inc, 1e-9),
+        "reference_s": ref_s,
+        "max_surface_index": hm.get("MaxSurfaceIndex"),
+        "max_edge_cut": hm.get("MaxEdgeCut"),
+        "max_degree": hm.get("MaxDegree"),
+        "inter_node_ghosts": hm.get("InterNodeGhosts"),
+        "intra_node_ghosts": hm.get("IntraNodeGhosts"),
+        "inter_node_halo_bytes_per_exchange": hm.get("InterNodeBytesPerExchange"),
+    }
+    return rows, stats
+
+
+def bench_mesh_rows() -> list[tuple]:
+    """CSV rows (name, us_per_call, derived); SKIPPED row on < 8 devices."""
+    rows, _ = _run()
+    return rows
+
+
+def smoke_main() -> int:
+    rows, stats = _run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if stats is None:
+        print("WARNING: mesh gate skipped (< 8 devices)")
+        return 0
+    ok_bits = stats["bit_equal_incremental"] and stats["bit_equal_rebuild"]
+    ok_events = stats["repartition_events"] >= 3
+    ok_speed = stats["incremental_total_s"] < stats["rebuild_total_s"]
+    passed = ok_bits and ok_events and ok_speed
+    if not passed:
+        print(
+            f"FAIL: bit_equal={ok_bits} "
+            f"(inc={stats['bit_equal_incremental']}, reb={stats['bit_equal_rebuild']}), "
+            f"repartition_events={stats['repartition_events']} (need >=3), "
+            f"incremental {stats['incremental_total_s']*1e3:.1f} ms vs "
+            f"rebuild {stats['rebuild_total_s']*1e3:.1f} ms"
+        )
+    else:
+        print(
+            f"PASS: distributed stencil bit-equal to reference across "
+            f"{stats['repartition_events']} repartition events "
+            f"({stats['amr_events']} AMR); incremental re-slice + "
+            f"node-local migration {stats['speedup']:.1f}x faster than "
+            f"rebuild+redistribute "
+            f"({stats['incremental_total_s']*1e3:.1f} ms vs "
+            f"{stats['rebuild_total_s']*1e3:.1f} ms)"
+        )
+    write_artifact("mesh", stats, passed=passed, echo=True)
+    return 0 if passed else 1
+
+
+if __name__ == "__main__":
+    if SMOKE:
+        sys.exit(smoke_main())
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_mesh_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -12,7 +12,13 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_hierarchy, bench_moe, bench_partitioner, bench_spmv
+    from benchmarks import (
+        bench_hierarchy,
+        bench_mesh,
+        bench_moe,
+        bench_partitioner,
+        bench_spmv,
+    )
 
     suites = [
         ("kdtree (paper Figs 2-5)", bench_partitioner.bench_kdtree_build),
@@ -23,6 +29,7 @@ def main() -> None:
         ("queries (Figs 12-13)", bench_partitioner.bench_queries),
         ("incremental LB (SIV)", bench_partitioner.bench_migration),
         ("hierarchical reslice (nodes x devices)", bench_hierarchy.bench_hierarchy_rows),
+        ("AMR mesh stencil loop (SI, SIV)", bench_mesh.bench_mesh_rows),
         ("spmv tables (Tables II-VII)", bench_spmv.bench_spmv_tables),
         ("spmv execution", bench_spmv.bench_spmv_execution),
         ("moe dispatch (DESIGN S3)", bench_moe.bench_moe_dispatch),

@@ -4,7 +4,11 @@ Builds a power-law graph, compares row-wise vs SFC partitions on the
 paper's Table II-VII metrics, and executes the reduce-scatter SpMV.
 
     PYTHONPATH=src python examples/partition_graph.py
+
+``REPRO_EXAMPLE_SMOKE=1`` shrinks sizes for the CI examples-smoke job.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +16,7 @@ import numpy as np
 from repro.core import spmv
 from repro.launch.mesh import make_mesh
 
-n = 50_000
+n = 4_000 if os.environ.get("REPRO_EXAMPLE_SMOKE", "0") == "1" else 50_000
 src, dst = spmv.powerlaw_graph(n, 10, seed=7)
 print(f"graph: {n} vertices, {len(src)} edges (power-law)")
 

@@ -2,19 +2,24 @@
 inspect the paper's quality metrics.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``REPRO_EXAMPLE_SMOKE=1`` shrinks sizes for the CI examples-smoke job.
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics, partitioner
 
 rng = np.random.default_rng(0)
+half = 2_000 if os.environ.get("REPRO_EXAMPLE_SMOKE", "0") == "1" else 30_000
 
 # a clustered 3-D point cloud with non-uniform weights
 pts = np.concatenate(
-    [rng.normal(0.2, 0.03, (30_000, 3)), rng.random((30_000, 3))]
+    [rng.normal(0.2, 0.03, (half, 3)), rng.random((half, 3))]
 ).astype(np.float32)
-weights = (rng.random(60_000) + 0.5).astype(np.float32)
+weights = (rng.random(2 * half) + 0.5).astype(np.float32)
 
 for curve in ("morton", "hilbert"):
     cfg = partitioner.PartitionerConfig(curve=curve, stats="rank")

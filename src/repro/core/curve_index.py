@@ -342,6 +342,20 @@ def query_keys(index: CurveIndex, queries: jax.Array) -> jax.Array:
     )
 
 
+def bucket_lookup(index: CurveIndex, keys: jax.Array) -> jax.Array:
+    """Directory bucket holding each key: the LAST bucket whose first key
+    is <= the key (the same convention as `owner_from_firsts`, applied to
+    the index's own B-entry directory instead of shard firsts).
+
+    This is the O(log B) directory hop every consumer of the index
+    shares: point location scans the bucket this returns, and the mesh
+    halo layer resolves a face-neighbor's *owning part* by looking its
+    key up here and reading the bucket's part — neither ever touches the
+    O(n) sorted store to route.
+    """
+    return owner_from_firsts(index.bucket_keys, keys)
+
+
 # ---------------------------------------------------------------------------
 # Slice boundaries against the directory
 # ---------------------------------------------------------------------------

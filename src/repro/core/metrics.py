@@ -77,6 +77,73 @@ def partition_report(
     return rep
 
 
+def spanning_communication_metrics(
+    part: np.ndarray,
+    needs: np.ndarray,
+    prod: np.ndarray,
+    owner: np.ndarray,
+    num_parts: int,
+) -> dict:
+    """Paper Tables II–VII metrics from a chunked communication structure.
+
+    THE one implementation of the AvgLoad / MaxLoad / MaxDegree /
+    MaxEdgeCut table columns — mesh, graph and SpMV all report through
+    it (``spmv.communication_metrics`` is a thin wrapper that derives
+    ``needs``/``prod``/``owner`` from a nonzero partition first).
+
+    ``needs[p, c]`` / ``prod[p, c]`` count the distinct entries of chunk
+    ``c`` that process ``p`` consumes / produces; ``owner[c]`` is the
+    process owning chunk ``c`` (the spanning set). Process ``p``
+    exchanges with ``owner(c)`` for every chunk it needs or produces and
+    does not own; MaxDegree is the max number of distinct partners and
+    MaxEdgeCut the max per-process exchanged volume (paper eq. (1)).
+    """
+    P = int(num_parts)
+    vol = np.zeros(P, dtype=np.int64)
+    partners: list[set] = [set() for _ in range(P)]
+    for c in range(P):
+        o = owner[c]
+        for p in range(P):
+            if p == o:
+                continue
+            x_vol = needs[p, c]
+            y_vol = prod[p, c]
+            if x_vol > 0 or y_vol > 0:
+                vol[p] += x_vol + y_vol
+                partners[p].add(o)
+                partners[o].add(p)
+    load = np.bincount(part, minlength=P).astype(np.int64)
+    deg = np.array([len(s) for s in partners])
+    return {
+        "AvgLoad": int(load.mean()),
+        "MaxLoad": int(load.max()),
+        "MaxDegree": int(deg.max()) if P > 0 else 0,
+        "MaxEdgeCut": int(vol.max()) if P > 0 else 0,
+        "TotalVolume": int(vol.sum()),
+        "owner": owner,
+    }
+
+
+def surface_index(owned_counts: np.ndarray, ghost_counts: np.ndarray) -> dict:
+    """Surface-to-volume quality of a mesh partition's halo.
+
+    ``owned_counts[p]`` / ``ghost_counts[p]`` are the owned and ghost
+    (halo) cell counts of part ``p``. The surface index — ghosts over
+    owned, the communication-to-computation ratio of one stencil sweep —
+    is the mesh analogue of the kNN cross fraction below: a misshapen
+    SFC slice shows up as a part whose halo rivals its interior.
+    """
+    owned = np.asarray(owned_counts, dtype=np.float64)
+    ghost = np.asarray(ghost_counts, dtype=np.float64)
+    si = ghost / np.maximum(owned, 1.0)
+    return {
+        "MaxSurfaceIndex": float(si.max()) if si.size else 0.0,
+        "AvgSurfaceIndex": float(si.mean()) if si.size else 0.0,
+        "TotalGhosts": int(ghost.sum()),
+        "MaxGhosts": int(ghost.max()) if ghost.size else 0,
+    }
+
+
 def knn_cross_fraction(
     points: np.ndarray, part: np.ndarray, k: int = 6, sample: int = 2048, seed: int = 0
 ) -> float:

@@ -211,13 +211,22 @@ def neighbor_locality(plan: MigrationPlan) -> float:
     return float(near) / max(float(moved), 1.0)
 
 
-def simulate_rounds(plan: MigrationPlan) -> list[np.ndarray]:
-    """Split the send matrix into per-round matrices, each pair <= chunk."""
+def simulate_rounds(plan: "MigrationPlan | HierarchicalMigrationPlan") -> list[np.ndarray]:
+    """Split the send matrix into per-round matrices, each pair <= its
+    level's chunk. Hierarchical plans cap intra-node pairs at ``chunk``
+    and inter-node pairs at the multiplier-shrunk ``inter_chunk`` — the
+    two fabrics schedule independently, so round r carries both levels'
+    r-th bounded message."""
     remaining = plan.send_counts.copy()
     np.fill_diagonal(remaining, 0)
+    if isinstance(plan, HierarchicalMigrationPlan):
+        same_node = _node_block_mask(plan.send_counts.shape[0], plan.devices_per_node)
+        cap = np.where(same_node, plan.chunk, plan.inter_chunk)
+    else:
+        cap = np.full(remaining.shape, plan.chunk, dtype=np.int64)
     out = []
     for _ in range(plan.rounds):
-        step = np.minimum(remaining, plan.chunk)
+        step = np.minimum(remaining, cap)
         out.append(step)
         remaining -= step
     assert remaining.sum() == 0 or plan.rounds == 0

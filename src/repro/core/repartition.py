@@ -282,6 +282,28 @@ class Repartitioner:
     def num_active(self) -> int:
         return int(self.dps.active.sum())
 
+    def partition_of(self, slot_ids) -> np.ndarray:
+        """Current part id per given storage slot, validated.
+
+        The slot-keyed consumer's accessor (the mesh application tracks
+        its cells by slot): raises if any queried slot is inactive —
+        silently reading a -1 part for a live-looking element is exactly
+        the class of bug a stale slot array produces.
+        """
+        ids = np.asarray(slot_ids)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.capacity):
+            # numpy would silently wrap negative ids to the tail slots —
+            # the exact stale-slot read this accessor exists to catch
+            raise ValueError(
+                f"slot ids out of range [0, {self.capacity}): "
+                f"min={ids.min()}, max={ids.max()}"
+            )
+        part = np.asarray(self._part)[ids]
+        if (part < 0).any():
+            bad = ids[part < 0][:8]
+            raise ValueError(f"inactive slots queried: {bad.tolist()}...")
+        return part
+
     @property
     def index_version(self) -> int:
         """Bumped whenever the cached curve (keys/order/frame) changes —

@@ -125,7 +125,15 @@ def communication_metrics(
     *,
     improve: bool = True,
 ) -> dict:
-    """Paper Tables II–VII metrics for a given nonzero partition."""
+    """Paper Tables II–VII metrics for a given nonzero partition.
+
+    Thin wrapper: derives the chunked communication structure (needs /
+    produces / spanning-set owner) from the nonzero partition, then
+    reports through the shared ``metrics.spanning_communication_metrics``
+    implementation (one table-metric code path for mesh, graph, SpMV).
+    """
+    from repro.core import metrics as _metrics
+
     chunk_bounds = vector_chunks(n, num_parts)
     needs, prod = _needs_matrix(part, rows, cols, chunk_bounds, num_parts)
     owner = (
@@ -133,32 +141,7 @@ def communication_metrics(
         if improve
         else np.arange(num_parts, dtype=np.int32)
     )
-    P = num_parts
-    # messages / volume: process p exchanges with owner(c) for every chunk
-    # c it needs (x broadcast) or produces (y reduce) and does not own.
-    vol = np.zeros(P, dtype=np.int64)
-    partners: list[set] = [set() for _ in range(P)]
-    for c in range(P):
-        o = owner[c]
-        for p in range(P):
-            if p == o:
-                continue
-            x_vol = needs[p, c]
-            y_vol = prod[p, c]
-            if x_vol > 0 or y_vol > 0:
-                vol[p] += x_vol + y_vol
-                partners[p].add(o)
-                partners[o].add(p)
-    load = np.bincount(part, minlength=P).astype(np.int64)
-    deg = np.array([len(s) for s in partners])
-    return {
-        "AvgLoad": int(load.mean()),
-        "MaxLoad": int(load.max()),
-        "MaxDegree": int(deg.max()) if P > 0 else 0,
-        "MaxEdgeCut": int(vol.max()) if P > 0 else 0,
-        "TotalVolume": int(vol.sum()),
-        "owner": owner,
-    }
+    return _metrics.spanning_communication_metrics(part, needs, prod, owner, num_parts)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,179 @@
+"""Distributed stencil execution over compiled halo plans.
+
+The executors here are deliberately dumb: every routing decision was
+made on the host when the `repro.mesh.halo` plan was compiled, so the
+device programs are pure gathers + fixed-lane ``all_to_all`` hops + one
+fused update — jitted ``shard_map`` closures memoized per static shape
+signature (the same lru_cache pattern as ``partitioner._reslice_fn``;
+shard_map must run under jit or every traced op dispatches as its own
+SPMD program).
+
+Bit-equality contract: :func:`reference_stencil` (single device, global
+cell order) and :func:`stencil_steps` (sharded, owned+ghost layout)
+evaluate the SAME per-cell expression — ``u_i += sum_k where(valid,
+coeff_ik * (u_nbr - u_i), 0)`` with identical (n, K) coefficient rows,
+identical slot order and identical float32 dtype — so a distributed
+sweep is bitwise equal to the reference sweep, which is what the
+``bench_mesh`` gate holds after repeated repartition + migration events.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import compat as _compat
+from repro.mesh.halo import GID_SENTINEL, HaloPlan, MovePlan
+
+
+def _a2a(buf, axis):
+    r = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=False)
+    return r.reshape(-1)
+
+
+def _route(prev, stage_meta, stage_idx, fill):
+    """Replay the plan's hops: gather into lane buffers, exchange."""
+    for (ax, lanes, scap), idx in zip(stage_meta, stage_idx):
+        src = jnp.clip(idx, 0, prev.shape[0] - 1)
+        buf = jnp.where(idx >= 0, prev[src], fill).reshape(lanes, scap)
+        prev = _a2a(buf, ax)
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# the stencil sweep
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _reference_fn(steps: int):
+    @jax.jit
+    def fn(u, nbr, valid, coeff):
+        for _ in range(steps):
+            vals = u[jnp.clip(nbr, 0, u.shape[0] - 1)]
+            contrib = jnp.where(valid, coeff * (vals - u[:, None]), jnp.float32(0.0))
+            u = u + jnp.sum(contrib, axis=-1)
+        return u
+    return fn
+
+
+def reference_stencil(u, nbr, valid, coeff, steps: int):
+    """``steps`` explicit heat sweeps on one device, global cell order."""
+    return _reference_fn(int(steps))(
+        jnp.asarray(u, jnp.float32), jnp.asarray(nbr), jnp.asarray(valid),
+        jnp.asarray(coeff, jnp.float32),
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _stencil_fn(mesh: jax.sharding.Mesh, axes: tuple, stage_meta: tuple, steps: int):
+    """Jitted halo-exchange + update executor, memoized per static
+    (mesh, axes, hop shapes, steps)."""
+
+    def kernel(u, nbr, valid, coeff, fetch, *stage_idx):
+        for _ in range(steps):
+            recv = _route(u, stage_meta, stage_idx, jnp.float32(0.0))
+            ghosts = jnp.where(
+                fetch >= 0, recv[jnp.clip(fetch, 0, recv.shape[0] - 1)], 0.0
+            )
+            vals_all = jnp.concatenate([u, ghosts])
+            vals = vals_all[nbr]
+            contrib = jnp.where(valid, coeff * (vals - u[:, None]), jnp.float32(0.0))
+            u = u + jnp.sum(contrib, axis=-1)
+        return u
+
+    spec = P(axes)
+    in_specs = (spec,) * (5 + len(stage_meta))
+    return jax.jit(_compat.shard_map(
+        kernel, mesh=mesh, in_specs=in_specs, out_specs=spec, check_vma=False,
+    ))
+
+
+def halo_args(jax_mesh: jax.sharding.Mesh, plan: HaloPlan):
+    """Device-resident executor arguments for one halo plan (placed once
+    per plan, outside the timed sweep loop)."""
+    sh = NamedSharding(jax_mesh, P(plan.axes))
+    S = plan.owned_idx.shape[0]
+    put = lambda a: jax.device_put(jnp.asarray(a), sh)
+    args = (
+        put(plan.nbr_local.reshape(S * plan.cap, plan.K)),
+        put(plan.nbr_valid.reshape(S * plan.cap, plan.K)),
+        put(plan.coeff.reshape(S * plan.cap, plan.K)),
+        put(plan.ghost_fetch.reshape(S * plan.gcap)),
+    )
+    stages = tuple(
+        put(s.idx.reshape(S * s.lanes * s.cap)) for s in plan.stages
+    )
+    return args + stages
+
+
+def stencil_steps(jax_mesh, plan: HaloPlan, u_dev, args, steps: int):
+    """Run ``steps`` distributed sweeps over the plan's layout.
+
+    ``u_dev`` is the (S*cap,) owned field (``plan.pack_cells`` layout);
+    ``args`` from :func:`halo_args`."""
+    fn = _stencil_fn(jax_mesh, plan.axes, plan.stage_meta, int(steps))
+    return fn(u_dev, *args)
+
+
+def put_state(jax_mesh, plan: HaloPlan, u_cells: np.ndarray):
+    """Host cell-order field -> device owned layout."""
+    sh = NamedSharding(jax_mesh, P(plan.axes))
+    return jax.device_put(jnp.asarray(plan.pack_cells(u_cells)), sh)
+
+
+# ---------------------------------------------------------------------------
+# state migration between partitions
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _move_fn(
+    mesh: jax.sharding.Mesh,
+    axes: tuple,
+    stage_meta: tuple,
+    cap_new: int,
+):
+    """Jitted state-move executor: route moved (slot, value) rows along
+    the plan's hops, then merge with the kept rows by slot sort — the
+    new layout's canonical ascending-slot order falls out of the sort."""
+
+    def kernel(u, gid, keep, *stage_idx):
+        prev_u, prev_g = u, gid
+        for (ax, lanes, scap), idx in zip(stage_meta, stage_idx):
+            src = jnp.clip(idx, 0, prev_u.shape[0] - 1)
+            sel = idx >= 0
+            buf_u = jnp.where(sel, prev_u[src], 0.0).reshape(lanes, scap)
+            buf_g = jnp.where(sel, prev_g[src], GID_SENTINEL).reshape(lanes, scap)
+            prev_u = _a2a(buf_u, ax)
+            prev_g = _a2a(buf_g, ax)
+        kept_g = jnp.where(keep, gid, GID_SENTINEL)
+        if stage_meta:
+            all_g = jnp.concatenate([kept_g, prev_g])
+            all_u = jnp.concatenate([u, prev_u])
+        else:
+            all_g, all_u = kept_g, u
+        order = jnp.argsort(all_g, stable=True)[:cap_new]
+        out_g = all_g[order]
+        return jnp.where(out_g != GID_SENTINEL, all_u[order], 0.0)
+
+    spec = P(axes)
+    in_specs = (spec,) * (3 + len(stage_meta))
+    return jax.jit(_compat.shard_map(
+        kernel, mesh=mesh, in_specs=in_specs, out_specs=spec, check_vma=False,
+    ))
+
+
+def move_state(jax_mesh, mv: MovePlan, old: HaloPlan, u_dev):
+    """Execute a compiled state move: ``u_dev`` in ``old``'s layout ->
+    the new plan's layout (values bit-preserved; rows only travel)."""
+    sh = NamedSharding(jax_mesh, P(mv.axes))
+    S = old.owned_idx.shape[0]
+    put = lambda a: jax.device_put(jnp.asarray(a), sh)
+    gid = put(old.owned_slot.astype(np.int32).reshape(S * old.cap))
+    keep = put(mv.keep.reshape(S * mv.cap_old))
+    stages = tuple(put(s.idx.reshape(S * s.lanes * s.cap)) for s in mv.stages)
+    fn = _move_fn(jax_mesh, mv.axes, mv.stage_meta, int(mv.cap_new))
+    return fn(u_dev, gid, keep, *stages)
