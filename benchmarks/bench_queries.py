@@ -13,6 +13,12 @@ Two claims measured on the same inputs:
   (key-gen + sort + carve). Also reported: the memoized-hit cost (what a
   serving layer actually pays when nothing changed) and the refresh after
   a delta insert (re-carve over the re-sorted cached keys).
+* **Skew robustness** (8+ devices; smoke forces 8 fake ones) — a
+  Zipf-hot workload under a tight per-lane budget pays multi-round
+  routing on the contiguous partition; replicating the hot buckets must
+  recover >1x throughput with bit-equal answers (gated), plus request
+  p50/p99 through the admission batcher and one elastic reshard
+  (device-count change with zero cold rebuilds).
 
     PYTHONPATH=src python benchmarks/bench_queries.py [n] [q] [--smoke]
 """
@@ -22,8 +28,15 @@ import time
 
 import numpy as np
 
-if os.environ.get("REPRO_BENCH_DIST", "0") == "1" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+_SMOKE = "--smoke" in sys.argv
+if _SMOKE or os.environ.get("REPRO_BENCH_DIST", "0") == "1":
+    # before the jax import; append so user-provided flags survive — the
+    # skew/elastic gates need 8 shards in BOTH CI smoke invocations
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +44,10 @@ import jax.numpy as jnp
 from repro.core import partitioner as pt
 from repro.core import queries
 from repro.core.repartition import Repartitioner
-from repro.serve.query_engine import DistributedQueryEngine
+from repro.runtime.elastic import ElasticServingController
+from repro.serve.query_engine import DistributedQueryEngine, QueryRequest
 
-SMOKE = "--smoke" in sys.argv
+SMOKE = _SMOKE
 argv = [a for a in sys.argv[1:] if not a.startswith("--")]
 N = int(argv[0]) if len(argv) > 0 else (20_000 if SMOKE else 200_000)
 Q = int(argv[1]) if len(argv) > 1 else (2_048 if SMOKE else 16_384)
@@ -51,6 +65,93 @@ def timed(fn, *args, warmup=1, reps=3):
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+LANE_ROWS = 16          # tight per-(src,dst) lane budget: skew hurts
+ZIPF_TOPK = 12          # hot buckets to replicate
+
+
+def skew_scenario(rp, rng):
+    """Zipf-hot point-location on an 8-shard mesh: the fixed lane budget
+    turns bucket skew into extra routing rounds; replicating the hottest
+    buckets serves them from the local annex instead. Ends with one
+    elastic device-count change (8 -> 6) under the live engine."""
+    from repro.launch.mesh import make_mesh
+
+    idx = rp.curve_index()
+    mesh8 = make_mesh((8,), ("data",))
+    eng = DistributedQueryEngine(idx, mesh8, "data",
+                                 lane_rows=LANE_ROWS, hit_decay=1.0)
+
+    # queries drawn from stored rows, buckets weighted Zipf(1) in a
+    # random bucket order (hot set is adversarial, not curve-contiguous)
+    B = idx.num_buckets
+    starts = np.asarray(idx.bucket_starts)
+    zipf = 1.0 / np.arange(1, B + 1)
+    bw = np.zeros(B)
+    bw[rng.permutation(B)] = zipf / zipf.sum()
+    rows = []
+    for b in rng.choice(B, min(Q, 4096), p=bw):
+        lo, hi = int(starts[b]), int(starts[b + 1])
+        if hi > lo:
+            rows.append(int(rng.integers(lo, hi)))
+    qz = jnp.asarray(np.asarray(idx.points)[rows], jnp.float32)
+    ref = queries.point_location(idx, qz, bucket_cap=eng._scan_cap)
+
+    t_contig = timed(lambda: eng.point_location(qz))
+    r0 = eng.stats.route_rounds
+    eng.point_location(qz)
+    rounds_contig = eng.stats.route_rounds - r0
+
+    hot = eng.replicate_hot(top_k=ZIPF_TOPK)
+    t_repl = timed(lambda: eng.point_location(qz))
+    r0 = eng.stats.route_rounds
+    got = eng.point_location(qz)
+    rounds_repl = eng.stats.route_rounds - r0
+    bit_equal = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(got, ref)
+    )
+
+    # request latency through the admission batcher (p50/p99)
+    step = max(1, qz.shape[0] // 16)
+    reqs = [QueryRequest(i, np.asarray(qz[o : o + step]), "pl")
+            for i, o in enumerate(range(0, qz.shape[0], step))]
+    eng.round_rows = 4 * step     # ~4 requests/round: latencies stagger
+    eng.run(reqs)
+    lat = np.asarray(eng.stats.request_latency_s)
+    p50, p99 = float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+    # elastic: shrink the serving pool 8 -> 6 under the live engine
+    ctl = ElasticServingController(rp, eng, devices=jax.devices()[:8])
+    ev = ctl.apply_device_change(jax.devices()[:6])
+    got6 = eng.point_location(qz)
+    elastic_equal = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(got6, ref)
+    )
+
+    ratio = t_contig / max(t_repl, 1e-9)
+    print(f"zipf pl (contiguous)        : {t_contig*1e3:8.2f} ms/batch  "
+          f"rounds={rounds_contig}")
+    print(f"zipf pl (hot replicated)    : {t_repl*1e3:8.2f} ms/batch  "
+          f"rounds={rounds_repl}  {ratio:5.2f}x  hot={len(hot)}")
+    print(f"zipf request latency        : p50 {p50*1e3:.2f} ms   "
+          f"p99 {p99*1e3:.2f} ms")
+    print(f"elastic reshard 8->6        : {ev.seconds*1e3:8.2f} ms  "
+          f"moved={ev.moved_units}  rebuilds={ev.rebuilds_during}")
+    return {
+        "zipf_q": int(qz.shape[0]), "zipf_lane_rows": LANE_ROWS,
+        "zipf_contig_s": t_contig, "zipf_repl_s": t_repl,
+        "zipf_speedup": ratio,
+        "zipf_rounds_contig": int(rounds_contig),
+        "zipf_rounds_repl": int(rounds_repl),
+        "zipf_p50_s": p50, "zipf_p99_s": p99,
+        "zipf_bit_equal": bool(bit_equal and elastic_equal),
+        "annex_served": int(eng.stats.annex_served),
+        "elastic_reshard_s": ev.seconds,
+        "elastic_rebuilds_during": int(ev.rebuilds_during),
+    }
 
 
 def main():
@@ -117,6 +218,10 @@ def main():
     print(f"refresh (memoized hit)      : {t_hit*1e6:8.2f} us")
     print(f"insert {extra.shape[0]:6d} + refresh     : {t_ins*1e3:8.2f} ms")
 
+    # --- adversarial skew: contiguous vs hot-bucket-replicated -------------
+    skew = skew_scenario(rp, rng) if len(jax.devices()) >= 8 else None
+    zipf_ok = skew is None or (skew["zipf_speedup"] > 1.0 and skew["zipf_bit_equal"])
+
     try:
         from benchmarks._artifact import write_artifact
     except ImportError:
@@ -124,6 +229,9 @@ def main():
     if speedup < MIN_REFRESH_SPEEDUP:
         print(f"WARNING: refresh speedup {speedup:.1f}x "
               f"< required {MIN_REFRESH_SPEEDUP}x")
+    if not zipf_ok:
+        print(f"WARNING: replication speedup {skew['zipf_speedup']:.2f}x "
+              f"(need >1x with bit-equal answers)")
     # the BENCH_<name>.json summary is the FINAL stdout line (CI scrapes it)
     write_artifact(
         "queries" + ("_dist" if mesh is not None else ""),
@@ -133,11 +241,12 @@ def main():
             "cold_build_s": t_cold, "refresh_s": t_refresh,
             "memoized_hit_s": t_hit, "insert_refresh_s": t_ins,
             "refresh_speedup": speedup,
+            **(skew or {}),
         },
-        passed=speedup >= MIN_REFRESH_SPEEDUP,
+        passed=speedup >= MIN_REFRESH_SPEEDUP and zipf_ok,
         echo=True,
     )
-    return 1 if speedup < MIN_REFRESH_SPEEDUP else 0
+    return 0 if (speedup >= MIN_REFRESH_SPEEDUP and zipf_ok) else 1
 
 
 if __name__ == "__main__":

@@ -356,6 +356,39 @@ def bucket_lookup(index: CurveIndex, keys: jax.Array) -> jax.Array:
     return owner_from_firsts(index.bucket_keys, keys)
 
 
+def replicable_buckets(index: CurveIndex, *, bucket_cap: int) -> np.ndarray:
+    """(B,) bool — directory buckets whose rows may be replicated onto
+    every shard as "exceptions to the partition" (hot-bucket serving)
+    with *bit-identical* point-location answers.
+
+    Bucket b is eligible iff every query key that ``bucket_lookup`` maps
+    to b has its ENTIRE key-equal run inside b's rows, and that run fits
+    the ``bucket_cap`` scan window. Then the annex scan sees exactly the
+    rows the routed owner-shard scan sees, in the same sorted order —
+    found / first-match id / miss certificate all coincide. Host-side
+    checks over the sorted keys:
+
+    * non-empty and no larger than ``bucket_cap`` rows;
+    * the first key does not continue a run from the previous bucket
+      (else a query mapping here may have matches before ``start_b``);
+    * the last key does not continue into the next bucket (else matches
+      after ``end_b``).
+    """
+    keys = np.asarray(index.keys)
+    starts = np.asarray(index.bucket_starts).astype(np.int64)
+    n_valid = int(starts[-1])
+    lo, hi = starts[:-1], starts[1:]
+    size = hi - lo
+    ok = (size >= 1) & (size <= int(bucket_cap))
+    if n_valid == 0:
+        return np.zeros(lo.shape[0], dtype=bool)
+    li = np.clip(lo, 0, n_valid - 1)       # clipped reads are only used
+    hc = np.clip(hi, 0, n_valid - 1)       # where the guard bit is live
+    cross_in = (lo > 0) & (keys[np.maximum(li - 1, 0)] == keys[li])
+    cross_out = (hi < n_valid) & (keys[np.maximum(hc - 1, 0)] == keys[hc])
+    return np.asarray(ok & ~cross_in & ~cross_out, dtype=bool)
+
+
 # ---------------------------------------------------------------------------
 # Slice boundaries against the directory
 # ---------------------------------------------------------------------------

@@ -185,6 +185,9 @@ class RepartitionStats:
     # step re-slices both levels)
     intra_reslices: int = 0
     inter_reslices: int = 0
+    # elastic part-count changes (device loss / growth): re-slices of the
+    # CACHED curve onto a new part count — never a rebuild
+    resizes: int = 0
     history: list = field(default_factory=list)
 
 
@@ -666,6 +669,33 @@ class Repartitioner:
         )
         return self._emit("rebuild", part, loads, imb, reused=False)
 
+    def resize(self, num_parts: int) -> RepartitionStep:
+        """Elastic part-count change (device loss / growth): re-slice the
+        CACHED curve onto ``num_parts`` parts. No tree adjustment, no
+        key generation, no sort — the paper's incremental-LB machinery IS
+        the elastic-scaling mechanism. The migration count matrix spans
+        ``max(old, new)`` parts so shrink paths account for units leaving
+        vanished parts (the `elastic.replacement_plan` sizing convention).
+
+        Bumps ``index_version``: the re-slice is a partition-geometry
+        event serving layers must observe (a ``maybe_refresh`` picks up
+        the same curve re-carved, never a cold rebuild)."""
+        old_part, old_parts_n = self._part, self.num_parts
+        self.num_parts = int(num_parts)
+        part, loads, imb = self._slice_current()
+        union = max(old_parts_n, self.num_parts)
+        counts = np.asarray(_send_counts_kernel(old_part, part, union))
+        plan = _migration.plan_from_counts(counts)
+        self._part = part
+        self._index_version += 1
+        self.stats.incremental_steps += 1
+        self.stats.resizes += 1
+        self.stats.history.append(("resize", float(imb), int(plan.total_moved)))
+        return RepartitionStep(
+            kind="incremental", part=part, plan=plan, loads=loads,
+            imbalance=imb, reused_keys=True,
+        )
+
     def step(self, timeop: float | None = None) -> RepartitionStep:
         """One engine step: consult the amortized controller (Alg. 3) and
         either re-slice incrementally or run a full rebuild.
@@ -794,6 +824,43 @@ class HierarchicalRepartitioner(Repartitioner):
         return super()._emit(kind, part, loads, imbalance, reused, **extra)
 
     # -- public stepping -----------------------------------------------------
+
+    def resize(self, plan: _pt.HierarchyPlan) -> RepartitionStep:  # type: ignore[override]
+        """Elastic mesh-shape change: re-slice the cached bucket curve
+        onto a new ``HierarchyPlan`` (node count and/or device fan-out).
+        Hierarchy-aware: the full two-level knapsack re-runs (a device
+        pool change is by definition an inter-node event), the frozen
+        bucket->node assignment refreshes, and ``index_version`` bumps so
+        serving layers swap live — tree, frame, keys and bucket summaries
+        are all reused (no rebuild).
+
+        The migration count matrix spans ``max(old, new)`` part ids; the
+        level-aware round schedule only applies when the union matches
+        the new hierarchy (pure growth) — a shrink emits a flat plan over
+        the union, since vanished parts have no (node, device) address in
+        the new plan."""
+        old_part, old_parts_n = self._part, self.num_parts
+        self.plan = plan
+        self.num_parts = int(plan.num_parts)
+        part, loads, imb = self._slice_current()   # refreshes _bucket_node
+        union = max(old_parts_n, self.num_parts)
+        counts = np.asarray(_send_counts_kernel(old_part, part, union))
+        mplan = _migration.plan_from_counts(
+            counts, hierarchy=plan if union == self.num_parts else None
+        )
+        self._part = part
+        self._index_version += 1
+        self.stats.incremental_steps += 1
+        self.stats.inter_reslices += 1
+        self.stats.resizes += 1
+        self.stats.history.append(("resize", float(imb), int(mplan.total_moved)))
+        nl = self._node_loads
+        return RepartitionStep(
+            kind="incremental", part=part, plan=mplan, loads=loads,
+            imbalance=imb, reused_keys=True, level="inter",
+            node_loads=nl,
+            node_imbalance=float(nl.max() / max(nl.mean(), 1e-12)),
+        )
 
     def rebalance(self, level: str | None = None) -> RepartitionStep:
         """Incremental re-slice; ``level`` forces "intra"/"inter", default

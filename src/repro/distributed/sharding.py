@@ -490,13 +490,17 @@ def apply_repartition(
 #
 # The serving layout: the CurveIndex's sorted arrays are split into
 # contiguous chunks over the mesh axis (shard rank = curve rank, the same
-# layout `distributed_partition` produces), the quantization frame is
-# replicated. A query batch arriving sharded P(axis) is answered with
-# exactly two all_to_all exchanges:
+# layout `distributed_partition` produces), with chunk boundaries cut at
+# KEY-RUN boundaries (a run of equal keys never spans two chunks — the
+# DistributedQueryEngine places chunks this way). A query batch arriving
+# sharded P(axis), with its curve keys precomputed by the caller
+# (`curve_index.query_keys` — coordinate quantization for point-keyed
+# indexes, the kd-tree root→leaf walk for tree-backed ones), is answered
+# with exactly two all_to_all exchanges:
 #
-#   1. key each local query against the frame, find its *owner* shard by
-#      binary search over the shards' first keys (one tiny all_gather),
-#      and exchange query coordinates to owners;
+#   1. find each local query's *owner* shard by binary search over the
+#      shards' first keys (one tiny all_gather) and exchange query
+#      coordinates + keys to owners;
 #   2. owners answer locally against their chunk (point location: exact
 #      key-run scan; kNN: curve-window candidate scan, distances + ids
 #      bit-packed into one reply buffer) and the answers ride the reverse
@@ -504,17 +508,22 @@ def apply_repartition(
 #      gathers its results at [owner, staged position] locally, so no
 #      slot ids are ever exchanged.
 #
-# Per-(src,dst) lane capacity equals the local query count, so routing can
-# never drop a query regardless of skew. Key-run / kNN windows clipped at
-# a chunk edge are reported via the `ok` flag (point location) or cost a
-# little recall at chunk seams (kNN) — the same CUTOFF economics as the
-# single-host path.
+# Because queries arrive pre-keyed, the kernels never touch the
+# quantization frame: tree-backed indexes (bucket keys addressed by a
+# tree walk the kernel could not run) shard into exactly the same layout
+# as point-keyed ones.
 #
-# Serving requires a POINT-KEYED index: queries are keyed from their
-# coordinates inside the kernel (`_ci.keys_in_frame`), so tree-backed
-# indexes — whose stored keys are bucket keys addressed by a kd-tree
-# walk — cannot shard into this layout (DistributedQueryEngine.swap
-# rejects them; they serve locally through repro.core.queries).
+# Per-(src,dst) lane capacity is a static parameter. At the default
+# (``lane_cap=None`` → the local query count) routing can never drop a
+# query regardless of skew. A production engine provisions smaller lanes
+# (memory ∝ nshards * lane_cap): the kernels then also return each row's
+# staged lane position so the caller can detect overflow (``pos >= cap``
+# means the row was dropped at the hot owner's lane) and re-dispatch only
+# the dropped rows next round — skew degrades into extra rounds, never
+# into wrong answers. Run-aligned chunking makes the key-run scan exact
+# (a miss is certified iff the run fits ``bucket_cap``, identical to the
+# single-host semantics); kNN windows clipped at a chunk seam cost a
+# little recall there — the same CUTOFF economics as the local path.
 
 
 def _exchange(x, axis):
@@ -537,11 +546,10 @@ def _answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap):
     found = jnp.any(hit, axis=1)
     slot = jnp.argmax(hit, axis=1)
     gid = ids_loc[cand[jnp.arange(rq.shape[0]), slot]]
-    # a key-run can extend backwards into the previous chunk (the owner
-    # is the LAST chunk whose first key <= qk, so forward extension is
-    # impossible): flag those misses as uncertified
-    edge = (lo_i == 0) & (keys_loc[0] == rqk)
-    ok = found | (((hi_i - lo_i) <= bucket_cap) & ~edge)
+    # run-aligned chunking guarantees the whole key-equal run lives in
+    # this chunk, so [lo_i, hi_i) is the query's GLOBAL run and the miss
+    # certificate is identical to queries._point_location's
+    ok = found | ((hi_i - lo_i) <= bucket_cap)
     return jnp.stack(
         [found.astype(jnp.int32), jnp.where(found, gid, -1), ok.astype(jnp.int32)],
         axis=-1,
@@ -582,8 +590,7 @@ def _query_serve_fn(
     k: int,
     bucket_cap: int,
     win: int,
-    bits: int,
-    curve: str,
+    cap: int,           # per-(src,dst) lane capacity (rows)
 ):
     """Jitted two-all_to_all query-serving executor, memoized per static
     config (shard_map must run under jit — see partitioner._reslice_fn)."""
@@ -592,38 +599,38 @@ def _query_serve_fn(
 
     nshards = mesh.shape[axis]
 
-    def kernel(pts_loc, ids_loc, keys_loc, q_loc, flo, fhi):
-        qcap = q_loc.shape[0]
-        qk = _ci.keys_in_frame(q_loc, flo, fhi, bits=bits, curve=curve)
+    def kernel(pts_loc, ids_loc, keys_loc, q_loc, qk):
         # owner shard: last shard whose first key <= qk
         firsts = jax.lax.all_gather(keys_loc[0], axis)          # (nshards,)
         owner = _ci.owner_from_firsts(firsts, qk)
-        (buf_q,), pos_of = _migration.stage_rows_by_dest(
-            owner, (q_loc,), nshards, qcap, (0.0,)
+        (buf_q, buf_k), pos_of = _migration.stage_rows_by_dest(
+            owner, (q_loc, qk), nshards, cap, (0.0, _ci.KEY_SENTINEL)
         )
-        rq = _exchange(buf_q, axis)                              # (nshards*qcap, d)
-        rqk = _ci.keys_in_frame(rq, flo, fhi, bits=bits, curve=curve)
+        rq = _exchange(buf_q, axis)                              # (nshards*cap, d)
+        rqk = _exchange(buf_k, axis)
         # answers come back in the mirrored lane layout, so each source
         # shard gathers its own results at [owner, pos] locally — no slot
-        # ids travel in either direction
+        # ids travel in either direction. Rows with pos_of >= cap were
+        # dropped at staging (lane overflow): the gather is clamped and
+        # the caller masks them out and re-dispatches.
 
-        def reply(ans):                                          # (r, c) -> (qcap, c)
+        def reply(ans):                                          # (r, c) -> (q_loc, c)
             back = jax.lax.all_to_all(
-                ans.reshape(nshards, qcap, -1), axis,
+                ans.reshape(nshards, cap, -1), axis,
                 split_axis=0, concat_axis=0, tiled=False,
             )
-            return back[owner, pos_of]
+            return back[owner, jnp.minimum(pos_of, cap - 1)]
 
         if mode == "pl":
-            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap))
+            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap)), pos_of
         got = reply(_answer_knn(pts_loc, ids_loc, keys_loc, rq, rqk, k, win))
-        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32)
+        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32), pos_of
 
-    out_specs = P(axis) if mode == "pl" else (P(axis), P(axis))
+    out_specs = (P(axis), P(axis)) if mode == "pl" else (P(axis), P(axis), P(axis))
     return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P()),
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=out_specs,
         check_vma=False,
     ))
@@ -638,8 +645,7 @@ def _query_serve_fn_2d(
     k: int,
     bucket_cap: int,
     win: int,
-    bits: int,
-    curve: str,
+    cap: int,           # per-(src,dst) inter-node lane capacity (rows)
 ):
     """Two-level (key -> node -> device) query-serving executor.
 
@@ -660,6 +666,12 @@ def _query_serve_fn_2d(
     ids never travel. Owner shards are identical to the flat kernel's
     (`curve_index.owner_from_firsts` applied per level over globally
     sorted firsts), hence so are the answers.
+
+    Lane overflow can only happen at hop 1 (``cap`` rows per node lane):
+    hop 2 sizes its device lanes at ``s_node * cap`` — the whole incoming
+    buffer — so a staged query is never dropped intra-node. The returned
+    positions are therefore hop-1 positions, interpreted exactly like the
+    flat kernel's (``pos >= cap`` → dropped, re-dispatch).
     """
     from repro.core import curve_index as _ci
     from repro.core import migration as _migration
@@ -668,52 +680,61 @@ def _query_serve_fn_2d(
     s_dev = mesh.shape[device_axis]
     axes = (node_axis, device_axis)
 
-    def kernel(pts_loc, ids_loc, keys_loc, q_loc, flo, fhi):
-        qcap = q_loc.shape[0]
-        qk = _ci.keys_in_frame(q_loc, flo, fhi, bits=bits, curve=curve)
+    def kernel(pts_loc, ids_loc, keys_loc, q_loc, qk):
         firsts_dev = jax.lax.all_gather(keys_loc[0], device_axis)   # (S_d,) my node
         node_firsts = jax.lax.all_gather(firsts_dev[0], node_axis)  # (S_n,)
         # --- hop 1: inter-node (N lanes; self-lane stays on-node) ---------
         owner_node = _ci.owner_from_firsts(node_firsts, qk)
-        (buf_q,), pos_a = _migration.stage_rows_by_dest(
-            owner_node, (q_loc,), s_node, qcap, (0.0,)
+        (buf_q, buf_k), pos_a = _migration.stage_rows_by_dest(
+            owner_node, (q_loc, qk), s_node, cap, (0.0, _ci.KEY_SENTINEL)
         )
-        rq1 = _exchange(buf_q, node_axis)                   # (S_n*qcap, d)
-        rqk1 = _ci.keys_in_frame(rq1, flo, fhi, bits=bits, curve=curve)
+        rq1 = _exchange(buf_q, node_axis)                   # (S_n*cap, d)
+        rqk1 = _exchange(buf_k, node_axis)
         # --- hop 2: node-local device lookup (intra-node only) ------------
         owner_dev = _ci.owner_from_firsts(firsts_dev, rqk1)
-        cap2 = s_node * qcap
-        (buf2,), pos_b = _migration.stage_rows_by_dest(
-            owner_dev, (rq1,), s_dev, cap2, (0.0,)
+        cap2 = s_node * cap
+        (buf2, buf2k), pos_b = _migration.stage_rows_by_dest(
+            owner_dev, (rq1, rqk1), s_dev, cap2, (0.0, _ci.KEY_SENTINEL)
         )
         rq = _exchange(buf2, device_axis)                   # (S_d*cap2, d)
-        rqk = _ci.keys_in_frame(rq, flo, fhi, bits=bits, curve=curve)
+        rqk = _exchange(buf2k, device_axis)
 
-        def reply(ans):                                     # (S_d*cap2, c) -> (qcap, c)
+        def reply(ans):                                     # (S_d*cap2, c) -> (q_loc, c)
             back_b = jax.lax.all_to_all(
                 ans.reshape(s_dev, cap2, -1), device_axis,
                 split_axis=0, concat_axis=0, tiled=False,
             )[owner_dev, pos_b]                             # (cap2, c) on owner node
             back_a = jax.lax.all_to_all(
-                back_b.reshape(s_node, qcap, -1), node_axis,
+                back_b.reshape(s_node, cap, -1), node_axis,
                 split_axis=0, concat_axis=0, tiled=False,
             )
-            return back_a[owner_node, pos_a]                # (qcap, c)
+            return back_a[owner_node, jnp.minimum(pos_a, cap - 1)]
 
         if mode == "pl":
-            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap))
+            return reply(_answer_pl(pts_loc, ids_loc, keys_loc, rq, rqk, bucket_cap)), pos_a
         got = reply(_answer_knn(pts_loc, ids_loc, keys_loc, rq, rqk, k, win))
-        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32)
+        return got[:, :k], jax.lax.bitcast_convert_type(got[:, k:], jnp.int32), pos_a
 
     spec = P(axes)
-    out_specs = spec if mode == "pl" else (spec, spec)
+    out_specs = (spec, spec) if mode == "pl" else (spec, spec, spec)
     return jax.jit(_compat.shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(spec, spec, spec, spec, P(), P()),
+        in_specs=(spec, spec, spec, spec, spec),
         out_specs=out_specs,
         check_vma=False,
     ))
+
+
+def _serve_cap(mesh: Mesh, axis, n_rows: int, lane_cap: "int | None") -> int:
+    """Effective per-lane capacity: the local query count (no-drop
+    worst-case sizing) clipped to the caller's provisioned ``lane_cap``."""
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    nshards = 1
+    for a in axes:
+        nshards *= mesh.shape[a]
+    qcap = max(1, n_rows // nshards)
+    return qcap if lane_cap is None else max(1, min(int(lane_cap), qcap))
 
 
 def serve_point_location(
@@ -723,24 +744,27 @@ def serve_point_location(
     ids_s: jax.Array,
     keys_s: jax.Array,
     queries: jax.Array,
-    frame_lo: jax.Array,
-    frame_hi: jax.Array,
+    qkeys: jax.Array,
     *,
-    bits: int,
-    curve: str = "morton",
     bucket_cap: int = 64,
-) -> jax.Array:
-    """Distributed exact point location. ``queries`` (Q, d) sharded over
-    ``axis``, Q divisible by the shard count; returns (Q, 3) int32
-    columns (found, id, ok). A ``(node_axis, device_axis)`` tuple routes
-    hierarchically (key -> node -> device; see `_query_serve_fn_2d`) —
-    answers are identical to the flat routing on the same chunk layout.
-    """
+    lane_cap: "int | None" = None,
+) -> tuple[jax.Array, jax.Array, int]:
+    """Distributed exact point location. ``queries`` (Q, d) and their
+    precomputed curve keys ``qkeys`` (Q,) uint32 sharded over ``axis``,
+    Q divisible by the shard count; returns ((Q, 3) int32 columns
+    (found, id, ok), (Q,) staged lane positions, effective lane cap).
+    Rows with ``pos >= cap`` overflowed their owner's lane and carry
+    garbage — re-dispatch them. A ``(node_axis, device_axis)`` tuple
+    routes hierarchically (key -> node -> device; see
+    `_query_serve_fn_2d`) — answers are identical to the flat routing on
+    the same chunk layout."""
+    cap = _serve_cap(mesh, axis, queries.shape[0], lane_cap)
     if isinstance(axis, tuple):
-        fn = _query_serve_fn_2d(mesh, *axis, "pl", 0, bucket_cap, 0, bits, curve)
+        fn = _query_serve_fn_2d(mesh, *axis, "pl", 0, bucket_cap, 0, cap)
     else:
-        fn = _query_serve_fn(mesh, axis, "pl", 0, bucket_cap, 0, bits, curve)
-    return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)
+        fn = _query_serve_fn(mesh, axis, "pl", 0, bucket_cap, 0, cap)
+    res, pos = fn(pts_s, ids_s, keys_s, queries, qkeys)
+    return res, pos, cap
 
 
 def serve_knn(
@@ -750,20 +774,21 @@ def serve_knn(
     ids_s: jax.Array,
     keys_s: jax.Array,
     queries: jax.Array,
-    frame_lo: jax.Array,
-    frame_hi: jax.Array,
+    qkeys: jax.Array,
     *,
-    bits: int,
-    curve: str = "morton",
     k: int = 3,
     win: int = 192,
-) -> tuple[jax.Array, jax.Array]:
+    lane_cap: "int | None" = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, int]:
     """Distributed approximate kNN over the sharded curve. Returns
-    ((Q, k) distances, (Q, k) ids), invalid slots inf/-1. A
-    ``(node_axis, device_axis)`` tuple routes hierarchically, as in
-    `serve_point_location`."""
+    ((Q, k) distances, (Q, k) ids, (Q,) lane positions, effective lane
+    cap); invalid slots inf/-1, rows with ``pos >= cap`` dropped at the
+    owner lane (re-dispatch). A ``(node_axis, device_axis)`` tuple routes
+    hierarchically, as in `serve_point_location`."""
+    cap = _serve_cap(mesh, axis, queries.shape[0], lane_cap)
     if isinstance(axis, tuple):
-        fn = _query_serve_fn_2d(mesh, *axis, "knn", k, 0, win, bits, curve)
+        fn = _query_serve_fn_2d(mesh, *axis, "knn", k, 0, win, cap)
     else:
-        fn = _query_serve_fn(mesh, axis, "knn", k, 0, win, bits, curve)
-    return fn(pts_s, ids_s, keys_s, queries, frame_lo, frame_hi)
+        fn = _query_serve_fn(mesh, axis, "knn", k, 0, win, cap)
+    d, g, pos = fn(pts_s, ids_s, keys_s, queries, qkeys)
+    return d, g, pos, cap

@@ -5,25 +5,46 @@ serving scale).
 query service:
 
 * **Sharded serving** — the index's sorted arrays are split into
-  contiguous curve chunks over a mesh axis; a query batch is routed to
-  its owner shard by curve key (one all_to_all out, answers ride one
-  all_to_all back — ``repro.distributed.sharding.serve_point_location`` /
-  ``serve_knn``). Without a mesh the engine answers locally through
-  ``repro.core.queries`` — same index, same semantics.
-* **Knapsack admission** — mixed-size query requests are grouped into
-  balanced rounds with the same greedy knapsack the decode engine uses
-  (``serve.engine.knapsack_batches``), so one huge batch cannot starve a
-  round. The ``AmortizedController`` (paper Alg. 3) meters per-round
-  imbalance and triggers re-batching of the in-flight queue when drift
-  exhausts the credits banked at admission.
-* **Live version swap** — ``maybe_refresh(owner)`` compares the engine's
-  index version against the owner's (``Repartitioner.index_version``)
-  and swaps in ``owner.curve_index()`` when stale. The refresh is the
-  incremental path: cached keys and order are reused, only the bucket
-  directory is re-carved and (in distributed mode) re-placed on shards.
+  contiguous curve chunks over a mesh axis, with chunk cuts snapped to
+  key-run boundaries so the exact-scan miss certificate survives the
+  split; a query batch is keyed host-side (``curve_index.query_keys`` —
+  coordinate quantization for point-keyed indexes, the kd-tree walk for
+  tree-backed ones) and routed to its owner shard by curve key (one
+  all_to_all out, answers ride one all_to_all back —
+  ``repro.distributed.sharding.serve_point_location`` / ``serve_knn``).
+  Host-side keying is what lets tree-backed indexes serve on a mesh:
+  the key→bucket→part resolution happens before the collective, so the
+  kernels never need the tree. Without a mesh the engine answers locally
+  through ``repro.core.queries`` — same index, same semantics.
+* **Hot-bucket replication** — the router counts per-bucket hits
+  (decayed) on every batch; ``replicate_hot`` installs the hottest
+  *eligible* buckets (``curve_index.replicable_buckets`` — buckets whose
+  key runs are self-contained) as a replicated annex, "exceptions to the
+  partition": point-location queries landing in a replicated bucket are
+  answered from the annex before routing, bit-equal to the routed
+  answer, so a skewed key range stops saturating one owner shard.
+* **Bounded lanes + admission** — ``lane_rows`` provisions the per-lane
+  exchange capacity below the worst case; overflowed rows are detected
+  (staged position >= capacity) and re-dispatched, so skew degrades into
+  extra rounds, never wrong answers. ``submit`` is a bounded admission
+  queue (``max_queue_rows``), and ``run`` levels load by adapting the
+  per-round row budget to the measured serve rate
+  (``target_round_s``), with per-request latencies recorded in
+  ``stats.request_latency_s``. Mixed-size requests are grouped into
+  balanced rounds with the greedy knapsack
+  (``serve.engine.knapsack_batches``); the ``AmortizedController``
+  (paper Alg. 3) decides when to re-batch the in-flight queue.
+* **Live version swap + elastic reshard** — ``maybe_refresh(owner)``
+  swaps in ``owner.curve_index()`` when stale (incremental: cached keys
+  and order reused, only the directory re-carved and re-placed);
+  ``reshard(mesh, axis)`` re-places the *current* index on a different
+  mesh (device loss / growth) without touching the index itself — the
+  elastic path is a reshard + version swap, never a cold rebuild.
 """
 from __future__ import annotations
 
+import functools
+import time
 from dataclasses import dataclass, field
 from typing import Literal
 
@@ -60,7 +81,38 @@ class ServeStats:
     rebatches: int = 0
     queries_served: int = 0
     index_swaps: int = 0
+    # skew-robust serving counters
+    route_rounds: int = 0        # sharded dispatches (lane overflow adds rounds)
+    annex_served: int = 0        # queries answered from the replicated annex
+    replications: int = 0        # replicate_hot installs
+    reshards: int = 0            # live mesh changes (elastic)
+    rejected_requests: int = 0   # admission-queue overflow
+    rejected_rows: int = 0
+    request_latency_s: list = field(default_factory=list)
     history: list = field(default_factory=list)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_cap",))
+def _annex_pl(apts, aids, akeys, bucket_keys, hot_mask, q, qk, *, bucket_cap):
+    """Point location against the replicated hot-bucket annex.
+
+    Returns (hot, found, id, ok): ``hot`` marks queries whose directory
+    bucket is replicated — for those the annex rows contain the query's
+    entire key run (the `replicable_buckets` eligibility invariant), so
+    found/id/ok are bit-identical to the routed owner-shard answer."""
+    hot = hot_mask[_ci.owner_from_firsts(bucket_keys, qk)]
+    n_loc = akeys.shape[0]
+    lo_i = jnp.searchsorted(akeys, qk, side="left").astype(jnp.int32)
+    hi_i = jnp.searchsorted(akeys, qk, side="right").astype(jnp.int32)
+    offs = jnp.arange(bucket_cap, dtype=jnp.int32)
+    pos = lo_i[:, None] + offs[None, :]
+    cand = jnp.clip(pos, 0, n_loc - 1)
+    hit = jnp.all(apts[cand] == q[:, None, :], axis=-1) & (pos < hi_i[:, None])
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)
+    gid = aids[cand[jnp.arange(q.shape[0]), slot]]
+    ok = found | ((hi_i - lo_i) <= bucket_cap)
+    return hot, found, jnp.where(found, gid, -1), ok
 
 
 class DistributedQueryEngine:
@@ -68,8 +120,10 @@ class DistributedQueryEngine:
 
     >>> eng = DistributedQueryEngine(rp.curve_index(), mesh, "data")
     >>> found, ids, ok = eng.point_location(q)
+    >>> eng.replicate_hot(4)                       # hottest buckets -> annex
     >>> rp.insert(new_pts, new_wts)                # geometry changed
     >>> eng.maybe_refresh(rp)                      # live index swap
+    >>> eng.reshard(smaller_mesh, "data")          # elastic device change
 
     On a 2-D (node, device) mesh, pass ``axis=("node", "device")``: the
     index shards node-major over both axes and queries route through the
@@ -77,6 +131,15 @@ class DistributedQueryEngine:
     inter-node all_to_all carries N lanes instead of N*D, and the
     device-level lookup plus its reply never leave the owner node.
     Answers are identical to flat routing on the same chunk layout.
+
+    Skew knobs: ``lane_rows`` bounds the per-(src,dst) exchange lanes (a
+    production memory budget; ``None`` provisions the worst case so one
+    round always suffices); under skew, overflowed rows re-dispatch in
+    extra rounds (``stats.route_rounds``) unless ``replicate_hot`` has
+    annexed their buckets. ``max_queue_rows`` bounds the admission queue
+    (``submit`` returns rejected requests); ``target_round_s`` adapts the
+    per-round row budget to the measured serve rate within
+    [min_batch_rows, max_batch_rows].
     """
 
     def __init__(
@@ -89,12 +152,26 @@ class DistributedQueryEngine:
         cutoff_buckets: int = 1,
         max_batch_rows: int = 4096,
         max_window: int = 1024,
+        lane_rows: int | None = None,
+        hit_decay: float = 0.9,
+        max_queue_rows: int | None = None,
+        min_batch_rows: int = 256,
+        target_round_s: float | None = None,
     ):
         self.mesh, self.axis = mesh, axis
         self.bucket_cap = int(bucket_cap)
         self.cutoff_buckets = int(cutoff_buckets)
         self.max_window = int(max_window)
         self.max_batch_rows = int(max_batch_rows)
+        self.lane_rows = None if lane_rows is None else int(lane_rows)
+        self.hit_decay = float(hit_decay)
+        self.max_queue_rows = max_queue_rows
+        self.min_batch_rows = int(min_batch_rows)
+        self.target_round_s = target_round_s
+        self.round_rows = self.max_batch_rows  # live per-round row budget
+        self._rate: float | None = None        # EWMA rows/s
+        self._hot: dict | None = None          # replicated annex (per version)
+        self._enq_t: dict[int, float] = {}     # id(request) -> enqueue stamp
         self.controller = AmortizedController()
         self.stats = ServeStats()
         self.queue: list[QueryRequest] = []
@@ -107,109 +184,303 @@ class DistributedQueryEngine:
         """Install a new index version (live: the next batch served uses
         it). Distributed mode re-places the sorted arrays on shards —
         still far cheaper than a cold build, which also pays key-gen and
-        the sort.
+        the sort. Both addressing modes shard: point-keyed indexes key
+        queries by coordinates, tree-backed ones by the kd-tree walk —
+        either way the keys are computed host-side before routing.
 
-        Tree-backed indexes (``index.tree`` set — a tree-mode
-        ``Repartitioner`` or ``partitioner.tree_index``) are served
-        locally: their queries are keyed by the kd-tree walk, which the
-        sharded serving kernels cannot run (they key by coordinates
-        inside ``shard_map``)."""
-        if self.mesh is not None and index.tree is not None:
-            raise ValueError(
-                "sharded serving requires a point-keyed CurveIndex; "
-                "tree-backed indexes serve locally (mesh=None) — use the "
-                "engine's cached-key mode for distributed serving"
-            )
+        Swapping resets the per-bucket hit counters and drops the
+        replicated annex (both are defined against the incoming
+        directory); call ``replicate_hot`` again once traffic has
+        re-warmed the counters."""
         self.index = index
         self.version = int(index.version)
         # directory granularity of the installed index: maybe_refresh
         # preserves it, so a live swap never silently changes the
         # cutoff-neighborhood geometry the engine was configured with
         self.bucket_size = max(1, int(index.valid_count()) // index.num_buckets)
+        # tree-backed runs span whole buckets (every member shares the
+        # bucket key): the exact scan must cover the largest bucket
+        self._scan_cap = (
+            max(self.bucket_cap, index.max_bucket_len)
+            if index.tree is not None
+            else self.bucket_cap
+        )
+        self._bucket_keys_h = np.asarray(index.bucket_keys)
+        self._hits = np.zeros(index.num_buckets, np.float64)
+        self._hot = None
         self.stats.index_swaps += 1
-        if self.mesh is None:
-            return
+        if self.mesh is not None:
+            self._place()
+
+    def reshard(
+        self,
+        mesh: jax.sharding.Mesh | None,
+        axis: "str | tuple[str, str] | None" = None,
+    ) -> None:
+        """Live mesh change (elastic shrink/growth): re-place the CURRENT
+        index's chunks over a different mesh. The index, the hit
+        counters, and the replicated annex are untouched — only the
+        chunk layout moves, so a device-count change costs one placement
+        pass, not a rebuild."""
+        self.mesh = mesh
+        if axis is not None:
+            self.axis = axis
+        if mesh is not None:
+            self._place()
+        self.stats.reshards += 1
+
+    def _place(self) -> None:
+        """Run-aligned chunk placement: cut the sorted arrays into
+        ``nshards`` contiguous chunks at key-run boundaries nearest the
+        equal-row targets, pad every chunk to the max chunk length with
+        sentinel rows, and shard P(axis). Runs never span chunks, so the
+        owner shard's key-run scan is exact — this is what makes the
+        distributed miss certificate (and tree-backed bucket runs) match
+        the local path bit for bit. Empty chunks (fewer runs than
+        shards) trail with sentinel first-keys, keeping shard firsts
+        sorted for `owner_from_firsts`."""
+        index = self.index
         nsh = self._num_shards()
-        n = index.capacity
-        n_pad = -(-n // nsh) * nsh
-        pts = index.points
-        ids = index.ids.astype(jnp.int32)
-        keys = index.keys
-        if n_pad != n:
-            pad = n_pad - n
-            pts = jnp.concatenate([pts, jnp.zeros((pad, pts.shape[1]), pts.dtype)])
-            ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
-            keys = jnp.concatenate(
-                [keys, jnp.full((pad,), jnp.uint32(0xFFFFFFFF), jnp.uint32)]
-            )
+        keys_h = np.asarray(index.keys)
+        n_valid = int(index.valid_count())
+        if n_valid:
+            run_starts = np.flatnonzero(np.diff(keys_h[:n_valid]) != 0) + 1
+            run_starts = np.concatenate([np.zeros(1, np.int64), run_starts])
+        else:
+            run_starts = np.zeros(1, np.int64)
+        targets = (np.arange(1, nsh, dtype=np.int64) * n_valid) // nsh
+        snap = np.searchsorted(run_starts, targets, side="right") - 1
+        cuts = run_starts[np.maximum(snap, 0)]
+        bounds = np.unique(np.concatenate([[0], cuts, [n_valid]]))
+        bounds = np.concatenate(
+            [bounds, np.full(nsh + 1 - bounds.shape[0], n_valid, np.int64)]
+        )
+        cap_rows = max(1, int(np.diff(bounds).max()))
+        pts_h = np.asarray(index.points)
+        ids_h = np.asarray(index.ids)
+        d = pts_h.shape[1]
+        pl_pts = np.zeros((nsh * cap_rows, d), pts_h.dtype)
+        pl_ids = np.full(nsh * cap_rows, -1, np.int32)
+        pl_keys = np.full(nsh * cap_rows, _ci.KEY_SENTINEL, np.uint32)
+        firsts = np.full(nsh, _ci.KEY_SENTINEL, np.uint32)
+        for s in range(nsh):
+            b0, b1 = int(bounds[s]), int(bounds[s + 1])
+            if b1 > b0:
+                o = s * cap_rows
+                pl_pts[o : o + b1 - b0] = pts_h[b0:b1]
+                pl_ids[o : o + b1 - b0] = ids_h[b0:b1]
+                pl_keys[o : o + b1 - b0] = keys_h[b0:b1]
+                firsts[s] = keys_h[b0]
         sh = NamedSharding(self.mesh, P(self.axis))
-        rep = NamedSharding(self.mesh, P())
-        self._pts_s = jax.device_put(pts, sh)
-        self._ids_s = jax.device_put(ids, sh)
-        self._keys_s = jax.device_put(keys, sh)
-        self._flo = jax.device_put(self.index.frame_lo, rep)
-        self._fhi = jax.device_put(self.index.frame_hi, rep)
+        self._pts_s = jax.device_put(jnp.asarray(pl_pts), sh)
+        self._ids_s = jax.device_put(jnp.asarray(pl_ids), sh)
+        self._keys_s = jax.device_put(jnp.asarray(pl_keys), sh)
+        self._firsts_h = firsts
+        self._chunk_bounds = bounds
 
     def maybe_refresh(self, owner, bucket_size: int | None = None) -> bool:
         """Swap in the owner's current index iff ours is stale, keeping
         the installed directory granularity unless ``bucket_size`` says
         otherwise. ``owner`` is anything with ``index_version`` +
-        ``curve_index()`` — today that is the single-host
-        ``Repartitioner``. A ``DistributedRepartitioner`` bumps
-        ``index_version`` but holds no point payload, so no index can be
-        derived from it: rebuild the CurveIndex from the migrated payload
-        and call ``swap`` directly."""
+        ``curve_index()`` — the single-host ``Repartitioner`` or the
+        ``HierarchicalRepartitioner`` (whose tree-backed index serves on
+        the mesh through host-side keying). A ``DistributedRepartitioner``
+        bumps ``index_version`` but holds no point payload, so no index
+        can be derived from it: rebuild the CurveIndex from the migrated
+        payload and call ``swap`` directly."""
         if int(owner.index_version) == self.version:
             return False
         self.swap(owner.curve_index(bucket_size or self.bucket_size))
         return True
 
+    # -- hot-bucket replication ----------------------------------------------
+
+    @property
+    def bucket_hits(self) -> np.ndarray:
+        """Decayed per-bucket hit counts (a copy; mesh mode only counts
+        real query rows — padding and fillers are keyed after this)."""
+        return self._hits.copy()
+
+    def _note_hits(self, qk: np.ndarray) -> None:
+        b = np.searchsorted(self._bucket_keys_h, qk, side="right").astype(np.int64) - 1
+        np.clip(b, 0, self._hits.shape[0] - 1, out=b)
+        if self.hit_decay < 1.0:
+            self._hits *= self.hit_decay
+        self._hits += np.bincount(b, minlength=self._hits.shape[0])
+
+    def replicate_hot(self, top_k: int = 8, *, min_hits: float = 1.0) -> list[int]:
+        """Install the hottest eligible buckets as a replicated annex —
+        the paper's "exceptions to the partition". Point-location queries
+        whose key lands in an annexed bucket are answered from the annex
+        (bit-equal to routing, see `curve_index.replicable_buckets`)
+        before any collective runs, so hot-key traffic stops consuming
+        the owner shard's lanes. Returns the replicated bucket ids.
+
+        kNN is never annex-served: its candidate window spans
+        neighboring buckets, which the annex does not hold."""
+        if self.mesh is None:
+            raise ValueError(
+                "hot-bucket replication is a sharded-serving feature; "
+                "local engines (mesh=None) already answer from one store"
+            )
+        elig = _ci.replicable_buckets(self.index, bucket_cap=self._scan_cap)
+        score = np.where(elig, self._hits, 0.0)
+        hot = np.flatnonzero(score >= float(min_hits))
+        if hot.size > int(top_k):
+            order = np.argsort(score[hot], kind="stable")[::-1]
+            hot = hot[order[: int(top_k)]]
+        hot = np.sort(hot)
+        if hot.size == 0:
+            self._hot = None
+            return []
+        starts = np.asarray(self.index.bucket_starts).astype(np.int64)
+        rows = np.concatenate(
+            [np.arange(starts[b], starts[b + 1]) for b in hot]
+        )
+        mask = np.zeros(self._hits.shape[0], bool)
+        mask[hot] = True
+        self._hot = {
+            "pts": jnp.asarray(np.asarray(self.index.points)[rows]),
+            "ids": jnp.asarray(np.asarray(self.index.ids)[rows].astype(np.int32)),
+            "keys": jnp.asarray(np.asarray(self.index.keys)[rows]),
+            "bkeys": jnp.asarray(self._bucket_keys_h),
+            "mask": jnp.asarray(mask),
+        }
+        self.stats.replications += 1
+        return hot.tolist()
+
     # -- one-shot serving ----------------------------------------------------
 
     def point_location(self, queries: jax.Array) -> _q.PointLocation:
         queries = jnp.asarray(queries, jnp.float32)
+        m = int(queries.shape[0])
         if self.mesh is None:
-            out = _q.point_location(self.index, queries, bucket_cap=self.bucket_cap)
-        else:
-            from repro.distributed import sharding as _shd
-
-            qp, nq = self._pad_shard(queries)
-            res = _shd.serve_point_location(
-                self.mesh, self.axis, self._pts_s, self._ids_s, self._keys_s,
-                qp, self._flo, self._fhi,
-                bits=self.index.bits, curve=self.index.curve,
-                bucket_cap=self.bucket_cap,
+            out = _q.point_location(self.index, queries, bucket_cap=self._scan_cap)
+            self.stats.queries_served += m
+            return out
+        q_np = np.asarray(queries)
+        qk_np = np.asarray(_ci.query_keys(self.index, queries))
+        self._note_hits(qk_np)
+        found = np.zeros(m, bool)
+        ids = np.full(m, -1, np.int32)
+        okv = np.zeros(m, bool)
+        pend = np.arange(m)
+        if self._hot is not None and m:
+            h = self._hot
+            hot, f_a, g_a, ok_a = _annex_pl(
+                h["pts"], h["ids"], h["keys"], h["bkeys"], h["mask"],
+                queries, jnp.asarray(qk_np), bucket_cap=self._scan_cap,
             )
-            res = res[:nq]
-            out = _q.PointLocation(
-                res[:, 0].astype(bool), res[:, 1], res[:, 2].astype(bool)
-            )
-        self.stats.queries_served += int(queries.shape[0])
-        return out
+            hot = np.asarray(hot)
+            if hot.any():
+                found[hot] = np.asarray(f_a)[hot]
+                ids[hot] = np.asarray(g_a)[hot]
+                okv[hot] = np.asarray(ok_a)[hot]
+                self.stats.annex_served += int(hot.sum())
+                pend = pend[~hot]
+        if pend.size:
+            self._route_pl(q_np, qk_np, pend, found, ids, okv)
+        self.stats.queries_served += m
+        return _q.PointLocation(jnp.asarray(found), jnp.asarray(ids), jnp.asarray(okv))
 
     def knn(self, queries: jax.Array, k: int = 3) -> tuple[jax.Array, jax.Array]:
         queries = jnp.asarray(queries, jnp.float32)
+        m = int(queries.shape[0])
         if self.mesh is None:
             out = _q.knn(
                 self.index, queries, k=k, cutoff_buckets=self.cutoff_buckets,
                 max_window=self.max_window,
             )
-        else:
-            from repro.distributed import sharding as _shd
+            self.stats.queries_served += m
+            return out
+        q_np = np.asarray(queries)
+        qk_np = np.asarray(_ci.query_keys(self.index, queries))
+        self._note_hits(qk_np)
+        win = max(k, min(
+            self.index.max_bucket_len * (2 * self.cutoff_buckets + 1),
+            self.max_window,
+        ))
+        d_out = np.full((m, k), np.inf, np.float32)
+        g_out = np.full((m, k), -1, np.int32)
+        if m:
+            self._route_knn(q_np, qk_np, np.arange(m), k, win, d_out, g_out)
+        self.stats.queries_served += m
+        return jnp.asarray(d_out), jnp.asarray(g_out)
 
-            win = max(k, min(
-                self.index.max_bucket_len * (2 * self.cutoff_buckets + 1),
-                self.max_window,
-            ))
-            qp, nq = self._pad_shard(queries)
-            d, g = _shd.serve_knn(
+    # -- bounded-lane routing ------------------------------------------------
+
+    def _round_buffers(self, q_np, pend_size: int):
+        """Fixed-shape padded batch: real pending rows first, filler rows
+        keyed with their OWN shard's first key so they ride the self-lane
+        (staged after real rows — stable staging drops fillers first on
+        overflow, so padding never evicts a real query). Filler answers
+        are sliced off; fillers are keyed after `_note_hits`, so they
+        never bias the replication statistics."""
+        nsh = self._num_shards()
+        n_pad = max(nsh, -(-pend_size // nsh) * nsh)
+        shard_of = (np.arange(n_pad) * nsh) // n_pad
+        pad_keys = self._firsts_h[shard_of]
+        qb = np.zeros((n_pad, q_np.shape[1]), np.float32)
+        kb = pad_keys.copy()
+        return qb, kb, pad_keys
+
+    def _route_pl(self, q_np, qk_np, pend, found, ids, okv) -> None:
+        from repro.distributed import sharding as _shd
+
+        qb, kb, pad_keys = self._round_buffers(q_np, pend.size)
+        sh = NamedSharding(self.mesh, P(self.axis))
+        while pend.size:
+            t = pend
+            qb[: t.size] = q_np[t]
+            qb[t.size :] = 0.0
+            kb[: t.size] = qk_np[t]
+            kb[t.size :] = pad_keys[t.size :]
+            res, pos, cap = _shd.serve_point_location(
                 self.mesh, self.axis, self._pts_s, self._ids_s, self._keys_s,
-                qp, self._flo, self._fhi,
-                bits=self.index.bits, curve=self.index.curve, k=k, win=win,
+                jax.device_put(jnp.asarray(qb), sh),
+                jax.device_put(jnp.asarray(kb), sh),
+                bucket_cap=self._scan_cap, lane_cap=self.lane_rows,
             )
-            out = (d[:nq], g[:nq])
-        self.stats.queries_served += int(queries.shape[0])
-        return out
+            self.stats.route_rounds += 1
+            res_h = np.asarray(res[: t.size])
+            served = np.asarray(pos[: t.size]) < cap
+            if not served.any():
+                raise RuntimeError(
+                    "query routing made no progress (lane_rows too small?)"
+                )
+            srv = t[served]
+            found[srv] = res_h[served, 0].astype(bool)
+            ids[srv] = res_h[served, 1]
+            okv[srv] = res_h[served, 2].astype(bool)
+            pend = t[~served]
+
+    def _route_knn(self, q_np, qk_np, pend, k, win, d_out, g_out) -> None:
+        from repro.distributed import sharding as _shd
+
+        qb, kb, pad_keys = self._round_buffers(q_np, pend.size)
+        sh = NamedSharding(self.mesh, P(self.axis))
+        while pend.size:
+            t = pend
+            qb[: t.size] = q_np[t]
+            qb[t.size :] = 0.0
+            kb[: t.size] = qk_np[t]
+            kb[t.size :] = pad_keys[t.size :]
+            d, g, pos, cap = _shd.serve_knn(
+                self.mesh, self.axis, self._pts_s, self._ids_s, self._keys_s,
+                jax.device_put(jnp.asarray(qb), sh),
+                jax.device_put(jnp.asarray(kb), sh),
+                k=k, win=win, lane_cap=self.lane_rows,
+            )
+            self.stats.route_rounds += 1
+            served = np.asarray(pos[: t.size]) < cap
+            if not served.any():
+                raise RuntimeError(
+                    "query routing made no progress (lane_rows too small?)"
+                )
+            srv = t[served]
+            d_out[srv] = np.asarray(d[: t.size])[served]
+            g_out[srv] = np.asarray(g[: t.size])[served]
+            pend = t[~served]
 
     def _num_shards(self) -> int:
         """Total chunk count: product of the serving axes' sizes (one
@@ -220,35 +491,26 @@ class DistributedQueryEngine:
             n *= self.mesh.shape[a]
         return n
 
-    def _pad_shard(self, queries: jax.Array) -> tuple[jax.Array, int]:
-        """Pad the batch to a multiple of the shard count and shard it.
-        Pad rows route like real queries and are sliced off on return —
-        lane capacity equals the local count, so they can't evict one."""
-        nsh = self._num_shards()
-        nq = queries.shape[0]
-        n_pad = -(-nq // nsh) * nsh
-        if n_pad != nq:
-            queries = jnp.concatenate(
-                [queries, jnp.zeros((n_pad - nq, queries.shape[1]), queries.dtype)]
-            )
-        sh = NamedSharding(self.mesh, P(self.axis))
-        return jax.device_put(queries, sh), nq
-
     # -- knapsack-batched serving of mixed request sizes ----------------------
 
     def run(self, requests: list[QueryRequest]) -> dict[int, object]:
         """Serve a mixed queue: knapsack-slice requests into balanced
-        rounds of ~max_batch_rows, answer each round in whole-batch
+        rounds of ~round_rows, answer each round in whole-batch
         dispatches (one per (kind, k) group), and let the amortized
         controller re-batch the remaining queue when round imbalance
         exhausts its credits.
 
         The engine's own ``self.queue`` is the live queue: ``requests``
-        are appended to it, ``submit`` may append more mid-flight, and
-        anything still queued when the current rounds run out is admitted
-        in a fresh knapsack pass — nothing is silently dropped."""
+        are admitted onto it (subject to ``max_queue_rows`` — rejected
+        requests are NOT served and don't appear in the results),
+        ``submit`` may append more mid-flight, and anything still queued
+        when the current rounds run out is admitted in a fresh knapsack
+        pass — nothing admitted is silently dropped. With
+        ``target_round_s`` set, the per-round row budget tracks the
+        measured serve rate (EWMA), so rounds level toward a constant
+        wall-time instead of a constant row count."""
         results: dict[int, object] = {}
-        self.queue.extend(requests)
+        self.submit(requests)
         pending = self.queue
         rounds = self._admit(pending)
         while rounds or pending:
@@ -258,12 +520,24 @@ class DistributedQueryEngine:
             for r in batch:
                 pending.remove(r)
             rows = sum(r.rows for r in batch)
+            t0 = time.monotonic()
             self._serve_round(batch, results)
+            now = time.monotonic()
+            for r in batch:
+                self.stats.request_latency_s.append(now - self._enq_t.pop(id(r), t0))
             self.stats.rounds += 1
+            dt = now - t0
+            if self.target_round_s is not None and dt > 0 and rows:
+                rate = rows / dt
+                self._rate = rate if self._rate is None else 0.5 * self._rate + 0.5 * rate
+                self.round_rows = int(np.clip(
+                    self._rate * self.target_round_s,
+                    self.min_batch_rows, self.max_batch_rows,
+                ))
             # imbalance metered against the ideal round: a round far above
             # target rows means the knapsack's input drifted (requests
             # added/removed) — Alg. 3 decides when re-batching pays
-            timeop = rows / max(self.max_batch_rows, 1)
+            timeop = rows / max(self.round_rows, 1)
             if self.controller.observe(timeop, max(len(rounds), 1)) and pending:
                 # _admit re-banks the credits (controller.balanced) with
                 # the fresh round layout's baseline
@@ -271,23 +545,41 @@ class DistributedQueryEngine:
                 self.stats.rebatches += 1
         return results
 
-    def submit(self, new: list[QueryRequest]) -> None:
-        """Enqueue more work onto the engine's live queue — ``run``
-        drains ``self.queue``, so mid-flight appends are picked up at the
-        next admission (re-batch or rounds running dry)."""
-        self.queue.extend(new)
+    def submit(self, new: list[QueryRequest]) -> list[QueryRequest]:
+        """Admit work onto the engine's live queue — ``run`` drains
+        ``self.queue``, so mid-flight appends are picked up at the next
+        admission (re-batch or rounds running dry). With
+        ``max_queue_rows`` set this is the bounded front: requests that
+        would push the queued row count past the bound are returned
+        (back-pressure) instead of enqueued."""
+        rejected: list[QueryRequest] = []
+        queued = sum(r.rows for r in self.queue)
+        now = time.monotonic()
+        for r in new:
+            if (
+                self.max_queue_rows is not None
+                and queued + r.rows > self.max_queue_rows
+            ):
+                rejected.append(r)
+                self.stats.rejected_requests += 1
+                self.stats.rejected_rows += r.rows
+                continue
+            queued += r.rows
+            self._enq_t[id(r)] = now
+            self.queue.append(r)
+        return rejected
 
     def _admit(self, pending: list[QueryRequest]) -> list[list[QueryRequest]]:
         if not pending:
             return []
         total = sum(r.rows for r in pending)
-        num_rounds = max(1, -(-total // self.max_batch_rows))
+        num_rounds = max(1, -(-total // self.round_rows))
         batches = knapsack_batches(
             pending, 0, weight=lambda r: r.rows, num_batches=num_rounds
         )
         self.controller.balanced(
             lb_cost=float(len(pending)), num_buckets=max(len(batches), 1),
-            timeop=total / max(num_rounds * self.max_batch_rows, 1),
+            timeop=total / max(num_rounds * self.round_rows, 1),
         )
         return batches
 

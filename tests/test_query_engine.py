@@ -152,3 +152,148 @@ def test_distributed_routing_subprocess():
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     assert "OK" in out.stdout
+
+
+def test_tree_backed_index_serves_locally(rng):
+    """Local serving path with a tree-backed index: swap must accept it
+    (regression — it used to raise ValueError) and the run-scan cap must
+    widen to the real max bucket length."""
+    pts = jnp.asarray(rng.random((2048, 3)), jnp.float32)
+    rp = Repartitioner(pts, None, num_parts=8, capacity=4096,
+                       cfg=PartitionerConfig(curve="morton", use_tree=True))
+    idx = rp.curve_index()
+    assert idx.tree is not None
+    eng = DistributedQueryEngine(idx, None)      # no ValueError
+    got = eng.point_location(pts[:256])
+    want = queries.point_location(idx, pts[:256], bucket_cap=eng._scan_cap)
+    np.testing.assert_array_equal(np.asarray(got.found), np.asarray(want.found))
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    assert bool(got.found.all())
+
+
+def test_replicate_hot_requires_mesh(rng):
+    pts, rp, eng = _engine(rng)
+    with pytest.raises(ValueError):
+        eng.replicate_hot(4)
+
+
+def test_admission_queue_rejects_overflow(rng):
+    pts, rp, eng = _engine(rng, max_queue_rows=200)
+    ok = QueryRequest(1, rng.random((150, 3)).astype(np.float32), "pl")
+    big = QueryRequest(2, rng.random((100, 3)).astype(np.float32), "pl")
+    rejected = eng.submit([ok, big])             # 150 + 100 > 200
+    assert rejected == [big] and eng.queue == [ok]
+    assert eng.stats.rejected_requests == 1
+    assert eng.stats.rejected_rows == 100
+    res = eng.run([])                            # queue drains, bound frees
+    assert set(res) == {1}
+    assert eng.submit([big]) == []               # admitted now
+    assert set(eng.run([])) == {2}
+
+
+def test_adaptive_round_rows_and_latency_stats(rng):
+    pts, rp, eng = _engine(
+        rng, max_batch_rows=1024, min_batch_rows=64, target_round_s=1e-9
+    )
+    reqs = [QueryRequest(i, rng.random((200, 3)).astype(np.float32), "pl")
+            for i in range(4)]
+    res = eng.run(reqs)
+    assert set(res) == {0, 1, 2, 3}
+    # an absurdly tight latency target drives the round budget to the floor
+    assert eng.round_rows == eng.min_batch_rows
+    assert len(eng.stats.request_latency_s) == 4
+    assert all(t >= 0.0 for t in eng.stats.request_latency_s)
+
+
+def test_tree_backed_and_skew_replication_subprocess():
+    """The headline fix plus the skew machinery on 8 fake devices:
+
+    * a tree-backed (kd-bucket ordered) index serves on a mesh and
+      matches the local tree walk bit for bit — hits, misses, certs;
+    * Zipf-hot queries under a tight lane budget take many routing
+      rounds; replicating the hot buckets collapses them and the annex
+      answers are bit-identical;
+    * padding rows never pollute the hit counters.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8"
+        " --xla_backend_optimization_level=0"
+    )
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import queries
+        from repro.core.partitioner import PartitionerConfig
+        from repro.core.repartition import Repartitioner
+        from repro.launch.mesh import make_mesh
+        from repro.serve.query_engine import DistributedQueryEngine
+
+        mesh = make_mesh((8,), ('data',))
+        rng = np.random.default_rng(7)
+        n = 4096
+        pts_h = rng.random((n, 2)).astype(np.float32)
+        pts_h[:64] = pts_h[0]        # duplicate run: key collisions
+        pts = jnp.asarray(pts_h)
+
+        # --- tree-backed index on the mesh vs the local tree walk -------
+        rp = Repartitioner(pts, None, num_parts=8, capacity=n,
+                           cfg=PartitionerConfig(curve='hilbert', use_tree=True))
+        idx = rp.curve_index(32)
+        assert idx.tree is not None
+        eng = DistributedQueryEngine(idx, mesh, 'data', bucket_cap=32,
+                                     hit_decay=1.0)
+        sel = rng.choice(n, 300, replace=False)
+        q = jnp.concatenate([pts[jnp.asarray(sel)],
+                             jnp.asarray(rng.random((211, 2)) + 1.5, jnp.float32)])
+        ref = queries.point_location(idx, q, bucket_cap=eng._scan_cap)
+        got = eng.point_location(q)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # padding rows (511 -> 512) never reach the hit counters
+        assert float(eng.bucket_hits.sum()) == float(q.shape[0])
+        print('OK tree-backed')
+
+        # --- Zipf skew: bounded lanes, then hot-bucket replication ------
+        eng2 = DistributedQueryEngine(idx, mesh, 'data', bucket_cap=32,
+                                      lane_rows=16, hit_decay=1.0)
+        B = idx.num_buckets
+        zipf = 1.0 / np.arange(1, B + 1)
+        hot_bucket = rng.permutation(B)
+        bw = np.zeros(B); bw[hot_bucket] = zipf / zipf.sum()
+        starts = np.asarray(idx.bucket_starts)
+        rows = []
+        for b in rng.choice(B, 1024, p=bw):
+            lo, hi = int(starts[b]), int(starts[b + 1])
+            if hi > lo:
+                rows.append(int(rng.integers(lo, hi)))
+        qz = jnp.asarray(np.asarray(idx.points)[rows], jnp.float32)
+        refz = queries.point_location(idx, qz, bucket_cap=eng2._scan_cap)
+
+        gz = eng2.point_location(qz)
+        rounds_contig = eng2.stats.route_rounds
+        for a, b in zip(gz, refz):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert rounds_contig > 1     # lane overflow forced re-dispatch
+
+        hot = eng2.replicate_hot(top_k=12)
+        assert hot and eng2.stats.replications == 1
+        gz2 = eng2.point_location(qz)
+        rounds_repl = eng2.stats.route_rounds - rounds_contig
+        for a, b in zip(gz2, refz):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert eng2.stats.annex_served > 0
+        assert rounds_repl < rounds_contig
+        eng2.replicate_hot(top_k=0)  # clears the annex
+        gz3 = eng2.point_location(qz)
+        for a, b in zip(gz3, refz):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print('OK skew', rounds_contig, rounds_repl,
+              int(eng2.stats.annex_served))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "OK tree-backed" in out.stdout and "OK skew" in out.stdout
