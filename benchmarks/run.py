@@ -1,17 +1,76 @@
 """Benchmark harness entrypoint (deliverable d): one function per paper
 table/figure. Prints ``name,us_per_call,derived`` CSV.
 
+``--compare OLD.json [NEW.json]`` instead diffs two ``BENCH_*.json``
+artifacts metric by metric (old, new, delta, percent) — the perf
+trajectory check for a PR: run the smoke suite, then compare its fresh
+artifact against the committed one. NEW defaults to ``BENCH_<name>.json``
+in the current directory, with ``<name>`` taken from OLD's payload.
+
 The roofline analysis (deliverable g) is a separate entrypoint —
 ``python -m benchmarks.roofline`` — because it needs the 512-fake-device
 environment, which must not leak into these CPU benchmarks.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
 
+def compare_artifacts(old_path: str, new_path: str | None = None) -> int:
+    """Print per-metric deltas between two benchmark artifacts.
+
+    Numeric metrics get old/new/delta/percent columns; non-numeric ones
+    (bools, lists) print old -> new and are flagged when they changed.
+    Returns 1 when either artifact records a failed smoke gate, else 0 —
+    regressions in individual metrics are reported, not gated, because
+    what counts as "worse" is metric-specific (the suites' own gates
+    hold the hard lines)."""
+    with open(old_path) as f:
+        old = json.load(f)
+    if new_path is None:
+        new_path = f"BENCH_{old['name']}.json"
+    with open(new_path) as f:
+        new = json.load(f)
+    if old.get("name") != new.get("name"):
+        print(
+            f"WARNING: comparing different suites "
+            f"({old.get('name')!r} vs {new.get('name')!r})"
+        )
+    om, nm = old.get("metrics", {}), new.get("metrics", {})
+    keys = sorted(set(om) | set(nm))
+    width = max((len(k) for k in keys), default=4)
+    print(f"# {old['name']}: {old_path} -> {new_path}")
+    print(f"{'metric':<{width}}  {'old':>14}  {'new':>14}  {'delta':>14}  {'pct':>8}")
+    for k in keys:
+        a, b = om.get(k), nm.get(k)
+        num = (
+            isinstance(a, (int, float)) and not isinstance(a, bool)
+            and isinstance(b, (int, float)) and not isinstance(b, bool)
+        )
+        if num:
+            d = b - a
+            pct = f"{100.0 * d / a:+8.1f}%" if a else "     n/a"
+            print(f"{k:<{width}}  {a:>14.6g}  {b:>14.6g}  {d:>+14.6g}  {pct}")
+        else:
+            mark = "" if a == b else "  CHANGED"
+            print(f"{k:<{width}}  {a!r:>14}  {b!r:>14}{mark}")
+    po, pn = old.get("passed"), new.get("passed")
+    if po is not None or pn is not None:
+        print(f"passed: {po} -> {pn}")
+    return 0 if pn in (True, None) and po in (True, None) else 1
+
+
 def main() -> None:
+    if "--compare" in sys.argv:
+        i = sys.argv.index("--compare")
+        paths = sys.argv[i + 1 : i + 3]
+        if not paths:
+            print("usage: run.py --compare OLD.json [NEW.json]", file=sys.stderr)
+            sys.exit(2)
+        sys.exit(compare_artifacts(paths[0], paths[1] if len(paths) > 1 else None))
     from benchmarks import (
         bench_hierarchy,
         bench_mesh,

@@ -17,6 +17,7 @@ from repro.kernels import bucket_search as _bs
 from repro.kernels import hilbert as _hil
 from repro.kernels import knapsack_scan as _ks
 from repro.kernels import morton as _mor
+from repro.kernels import stencil_update as _su
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
@@ -150,3 +151,26 @@ def fused_locate(
     return _bs.fused_locate(
         queries, boundary_keys, frame_lo, frame_hi, bits, interpret=INTERPRET
     )
+
+
+def stencil_update(
+    vals_all: jax.Array,
+    u_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    coeff: jax.Array,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Fused stencil row update (gather + mask + coeff*(v-u) + K-reduce).
+
+    The mesh stencil executors' inner loop. ``use_pallas`` dispatches the
+    Pallas kernel (REPRO_PALLAS_COMPILE-respecting via ``INTERPRET``);
+    the default jnp fallback is bit-equal by construction — both
+    evaluate `kernels.stencil_update.stencil_update_ref`'s expression.
+    """
+    if use_pallas:
+        return _su.fused_stencil_update(
+            vals_all, u_rows, nbr, valid, coeff, interpret=INTERPRET
+        )
+    return _su.stencil_update_ref(vals_all, u_rows, nbr, valid, coeff)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused stencil row update (paper §I mesh hot loop).
+
+One pass over (rows, K) tiles fuses the neighbor-value gather, the
+validity mask, the ``coeff * (u_nbr - u)`` contribution and the
+K-reduction — the unfused jnp path materializes the (n, K) ``vals`` and
+``contrib`` intermediates in HBM between four separate ops; here each
+grid block stages the FULL owned+ghost value vector into VMEM once
+(cap + gcap float32 — a few KB to low MB for every mesh in the paper's
+experiments, same in-VMEM-directory regime as `bucket_search`) and
+streams the (BLOCK_R, K) index/mask/coefficient tiles past it.
+
+Bit-equality contract: :func:`stencil_update_ref` is THE definition of
+the update — ``u_r + sum_k where(valid, coeff * (vals_all[nbr] - u_r),
+0)`` with the K-reduction spelled as an *explicit unrolled chain* of
+elementwise adds in ascending k. The unroll is load-bearing: a
+``jnp.sum(axis=-1)`` lowers to an XLA Reduce whose accumulation order
+is an implementation choice made per fusion context, so two programs
+computing "the same" row can disagree in the last ulp (observed on
+CPU: a standalone reduce vectorizes, the same reduce inside the
+overlapped stencil executor runs sequentially). A fixed add chain is
+ordinary float arithmetic XLA must not reassociate, so every caller —
+reference executor, pre-split baseline, overlapped executor, Pallas
+kernel — produces identical bits by construction. The distributed
+stencil gates on this (``np.array_equal`` against the single-device
+reference across repartition events).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 1024
+VALS_MAX = 1 << 20  # 1M owned+ghost values * 4B = 4 MiB of VMEM
+
+
+def stencil_update_ref(
+    vals_all: jax.Array,
+    u_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    coeff: jax.Array,
+) -> jax.Array:
+    """The one definition of the fused row update (jnp fallback).
+
+    ``vals_all`` (V,) owned+ghost values, ``u_rows`` (R,) the center
+    value of each row being updated, ``nbr``/``valid``/``coeff`` (R, K)
+    the row-local stencil tables. Returns the (R,) updated centers.
+    """
+    vals = vals_all[nbr]
+    contrib = jnp.where(valid, coeff * (vals - u_rows[:, None]), jnp.float32(0.0))
+    # fixed-order K accumulation (see module docstring: NOT jnp.sum)
+    acc = contrib[:, 0]
+    for k in range(1, contrib.shape[1]):
+        acc = acc + contrib[:, k]
+    return u_rows + acc
+
+
+def _update_kernel(vals_ref, u_ref, nbr_ref, valid_ref, coeff_ref, out_ref):
+    # same jnp expression as stencil_update_ref, on one (BLOCK_R, K) tile
+    vals_all = vals_ref[...]
+    u = u_ref[...]
+    vals = vals_all[nbr_ref[...]]
+    contrib = jnp.where(
+        valid_ref[...], coeff_ref[...] * (vals - u[:, None]), jnp.float32(0.0)
+    )
+    acc = contrib[:, 0]
+    for k in range(1, contrib.shape[1]):
+        acc = acc + contrib[:, k]
+    out_ref[...] = u + acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_stencil_update(
+    vals_all: jax.Array,
+    u_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    coeff: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused gather + mask + contribution + K-reduce, one kernel dispatch.
+
+    Pad rows (``valid`` all False) pass their center value through
+    unchanged up to ``+0.0`` — exactly what the unfused path computes.
+    """
+    R, K = nbr.shape
+    V = vals_all.shape[0]
+    assert V <= VALS_MAX, "owned+ghost vector must fit VMEM (tile vals_all beyond)"
+    r_pad = pl.cdiv(R, BLOCK_R) * BLOCK_R
+
+    def pad(a, fill):
+        return jnp.full((r_pad,) + a.shape[1:], fill, a.dtype).at[:R].set(a)
+
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(r_pad // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((V,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_R,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_R, K), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, K), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r_pad,), jnp.float32),
+        interpret=interpret,
+    )(
+        vals_all,
+        pad(u_rows, 0.0),
+        pad(nbr, 0),
+        pad(valid, False),
+        pad(coeff, 0.0),
+    )
+    return out[:R]

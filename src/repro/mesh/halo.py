@@ -21,6 +21,11 @@ Two plan flavors, mirroring PR 4's two-level machinery:
   the node — node-local ghosts never cross the inter-node boundary, by
   construction.
 
+Each plan also compiles the *interior/boundary split* of the owned
+rows (fixed-shape index sets): interior rows have no ghost neighbors,
+so the executors can update them while the exchange collectives are in
+flight and apply only the boundary rows after the recv lands.
+
 Ghost *ownership* is resolved against the ``CurveIndex`` directory
 (:func:`owners_from_index`): a face neighbor's key is looked up in the
 O(B) bucket directory and the bucket's part is read off — the same
@@ -90,6 +95,15 @@ class HaloPlan:
     coeff: np.ndarray              # (S, cap, K) float32
     stages: tuple[Stage, ...]      # value-routing hops
     ghost_fetch: np.ndarray        # (S, gcap) int32 into final recv, -1 pad
+    # interior/boundary split of the owned rows, compiled into the plan:
+    # a row is *interior* iff every valid neighbor slot points below
+    # ``cap`` (owned by the same device), so its update is provably
+    # independent of the ghost exchange; *boundary* rows read at least
+    # one ghost. The sets partition the real owned rows (-1 pads) and
+    # let the executor update interior cells while the exchange is in
+    # flight, applying boundary rows only after the recv lands.
+    interior_idx: np.ndarray = None  # (S, icap) int32 local row, -1 pad
+    boundary_idx: np.ndarray = None  # (S, bcap) int32 local row, -1 pad
     metrics: dict = field(default_factory=dict)
 
     @property
@@ -237,6 +251,22 @@ def build_halo_plan(
             loc[other] = np.array([cap + gp[int(c)] for c in nb[other]], np.int64)
         nbr_local[p, : cells.size] = np.where(valid, loc, 0)
 
+    # --- interior/boundary split -------------------------------------------
+    # invalid lanes carry loc 0 (< cap), so "reads a ghost" is exactly
+    # valid & (loc >= cap); rows beyond the owned count belong to
+    # neither set (their value is never written and stays 0.0)
+    reads_ghost = (nbr_valid & (nbr_local >= cap)).any(axis=2)  # (S, cap)
+    real = owned_idx >= 0
+    int_lists = [np.flatnonzero(real[p] & ~reads_ghost[p]) for p in range(S)]
+    bnd_lists = [np.flatnonzero(real[p] & reads_ghost[p]) for p in range(S)]
+    icap = _roundup(max(max(r.size for r in int_lists), 1))
+    bcap = _roundup(max(max(r.size for r in bnd_lists), 1))
+    interior_idx = np.full((S, icap), -1, np.int32)
+    boundary_idx = np.full((S, bcap), -1, np.int32)
+    for p in range(S):
+        interior_idx[p, : int_lists[p].size] = int_lists[p]
+        boundary_idx[p, : bnd_lists[p].size] = bnd_lists[p]
+
     # --- routing stages ----------------------------------------------------
     if N == 1:
         stages, ghost_fetch = _flat_stages(
@@ -248,6 +278,8 @@ def build_halo_plan(
         )
 
     mets = _halo_metrics(part, nbr, owned, ghosts, N, D, stages, weights)
+    mets["InteriorCells"] = int(sum(r.size for r in int_lists))
+    mets["BoundaryCells"] = int(sum(r.size for r in bnd_lists))
     return HaloPlan(
         axes=axes,
         num_parts=S,
@@ -261,6 +293,8 @@ def build_halo_plan(
         coeff=coeff_l,
         stages=stages,
         ghost_fetch=ghost_fetch,
+        interior_idx=interior_idx,
+        boundary_idx=boundary_idx,
         metrics=mets,
     )
 

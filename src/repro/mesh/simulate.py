@@ -129,6 +129,13 @@ class SimStats:
     move_s: float = 0.0
     stencil_s: float = 0.0
     plan_s: float = 0.0
+    # per-phase attribution of the sweep, measured once per compiled
+    # plan by the single-phase probes (reporting only: the hot loop runs
+    # the one fused overlapped program, where interior compute hides
+    # behind the in-flight exchange)
+    stencil_exchange_s: float = 0.0
+    stencil_interior_s: float = 0.0
+    stencil_boundary_s: float = 0.0
     cells_final: int = 0
     halo_metrics: dict = field(default_factory=dict)
 
@@ -142,12 +149,16 @@ def run_distributed(
     *,
     driver: str = "incremental",
     cfg: SimConfig = SimConfig(),
+    phase_probes: bool = False,
 ) -> tuple[np.ndarray, SimStats]:
     """Integrate the trajectory on a device mesh under one driver.
 
     ``hplan`` is the `partitioner.HierarchyPlan`; its ``num_parts`` must
     equal the device count of ``jax_mesh`` (parts name shards). Returns
     the final field in global cell order plus phase timings/accounting.
+    ``phase_probes`` additionally attributes sweep walltime to its
+    exchange/interior/boundary phases via the single-phase probe
+    executors (extra per-event probe calls — reporting, not the gate).
     """
     import jax
     import jax.numpy as jnp
@@ -266,6 +277,11 @@ def run_distributed(
                 )
 
         # --- stencil sweeps ------------------------------------------------
+        if phase_probes:
+            ph = _st.stencil_phase_times(jax_mesh, plan, u_dev, args)
+            st.stencil_exchange_s += substeps * ph["exchange"]
+            st.stencil_interior_s += substeps * ph["interior"]
+            st.stencil_boundary_s += substeps * ph["boundary"]
         t0 = time.perf_counter()
         u_dev = jax.block_until_ready(
             _st.stencil_steps(jax_mesh, plan, u_dev, args, substeps)

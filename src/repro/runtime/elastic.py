@@ -25,7 +25,7 @@ import numpy as np
 import jax
 
 from repro.core import knapsack, migration
-from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.fault_tolerance import HeartbeatMonitor, reslice_for_stragglers
 import jax.numpy as jnp
 
 
@@ -158,12 +158,43 @@ class ElasticServingController:
 
     def check(self, now: float) -> ReshardEvent | None:
         """Shrink to the surviving devices iff the monitor reports
-        failures; no-op (returns None) otherwise."""
+        failures. With every worker alive, slow-but-responsive workers
+        (stragglers) instead trigger a weighted re-cut of the serving
+        chunk layout (:meth:`mitigate_stragglers`) — no mesh change, no
+        ReshardEvent. Returns None when no failure fired."""
         failed = set(self.monitor.failed(now))
         if not failed:
+            self.mitigate_stragglers()
             return None
         survivors = [d for i, d in enumerate(self.devices) if i not in failed]
         return self.apply_device_change(survivors)
+
+    def mitigate_stragglers(self) -> np.ndarray | None:
+        """Straggler-driven weighted re-slice of the serving layout.
+
+        When the heartbeat monitor reports stragglers, feed the measured
+        per-worker speeds (:meth:`throughput`) into
+        `fault_tolerance.reslice_for_stragglers` over the index's
+        directory buckets — each bucket weighted by its row count plus
+        its decayed hit traffic — and re-cut the engine's chunk
+        placement at the resulting bucket boundaries
+        (``engine.set_chunk_targets``): slow shards hold fewer and
+        colder rows, fast shards more, converging to
+        proportional-throughput sharding under repeated observations.
+        Cuts stay run-aligned inside the engine, so answers are
+        bit-equal — only the load shares move. Returns the per-bucket
+        shard assignment, or None when there are no stragglers."""
+        if not self.monitor.stragglers():
+            return None
+        tp = self.throughput()
+        idx = self.engine.index
+        starts = np.asarray(idx.bucket_starts, np.int64)
+        w = np.diff(starts).astype(np.float64) + self.engine.bucket_hits
+        assignment = reslice_for_stragglers(np.maximum(w, 1e-9), tp)
+        # first bucket of each shard s in 1..W-1 marks that shard's cut
+        cuts = starts[np.searchsorted(assignment, np.arange(1, tp.shape[0]))]
+        self.engine.set_chunk_targets(cuts)
+        return assignment
 
     def apply_device_change(self, devices) -> ReshardEvent:
         """Re-slice + re-place + live swap onto an explicit device list

@@ -86,6 +86,7 @@ class ServeStats:
     annex_served: int = 0        # queries answered from the replicated annex
     replications: int = 0        # replicate_hot installs
     reshards: int = 0            # live mesh changes (elastic)
+    weighted_reslices: int = 0   # straggler-driven chunk re-placements
     rejected_requests: int = 0   # admission-queue overflow
     rejected_rows: int = 0
     request_latency_s: list = field(default_factory=list)
@@ -171,6 +172,7 @@ class DistributedQueryEngine:
         self.round_rows = self.max_batch_rows  # live per-round row budget
         self._rate: float | None = None        # EWMA rows/s
         self._hot: dict | None = None          # replicated annex (per version)
+        self._row_targets: np.ndarray | None = None  # weighted chunk cuts
         self._enq_t: dict[int, float] = {}     # id(request) -> enqueue stamp
         self.controller = AmortizedController()
         self.stats = ServeStats()
@@ -208,6 +210,9 @@ class DistributedQueryEngine:
         self._bucket_keys_h = np.asarray(index.bucket_keys)
         self._hits = np.zeros(index.num_buckets, np.float64)
         self._hot = None
+        # weighted chunk cuts are row positions in the OLD sorted order —
+        # stale against the incoming index, so revert to equal shares
+        self._row_targets = None
         self.stats.index_swaps += 1
         if self.mesh is not None:
             self._place()
@@ -229,6 +234,21 @@ class DistributedQueryEngine:
             self._place()
         self.stats.reshards += 1
 
+    def set_chunk_targets(self, row_targets) -> None:
+        """Weighted chunk placement: re-cut the sorted arrays at explicit
+        row positions instead of equal shares — the straggler-mitigation
+        hook (`runtime.elastic.ElasticServingController
+        .mitigate_stragglers` derives the cuts from measured per-worker
+        throughput via `fault_tolerance.reslice_for_stragglers`). Cuts
+        are still snapped to key-run boundaries, so routing and answers
+        stay bit-equal to equal-share placement; only the per-shard row
+        load changes. Cleared by ``swap`` (cuts are positions in the
+        installed index's sorted order)."""
+        self._row_targets = np.sort(np.asarray(row_targets, np.int64))
+        self.stats.weighted_reslices += 1
+        if self.mesh is not None:
+            self._place()
+
     def _place(self) -> None:
         """Run-aligned chunk placement: cut the sorted arrays into
         ``nshards`` contiguous chunks at key-run boundaries nearest the
@@ -248,7 +268,12 @@ class DistributedQueryEngine:
             run_starts = np.concatenate([np.zeros(1, np.int64), run_starts])
         else:
             run_starts = np.zeros(1, np.int64)
-        targets = (np.arange(1, nsh, dtype=np.int64) * n_valid) // nsh
+        if self._row_targets is not None and self._row_targets.shape[0] == nsh - 1:
+            # straggler-weighted cuts (set_chunk_targets); still snapped
+            # to run boundaries below, so answers stay bit-equal
+            targets = np.clip(self._row_targets, 0, n_valid)
+        else:
+            targets = (np.arange(1, nsh, dtype=np.int64) * n_valid) // nsh
         snap = np.searchsorted(run_starts, targets, side="right") - 1
         cuts = run_starts[np.maximum(snap, 0)]
         bounds = np.unique(np.concatenate([[0], cuts, [n_valid]]))

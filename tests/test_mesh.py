@@ -364,3 +364,114 @@ def test_distributed_stencil_bit_equal_and_loop_closes():
         print("OK", st.repartition_events)
     """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# overlapped stencil executor: plan split, compile caching, bit-equality
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(rounds=st.integers(1, 2), nodes=st.sampled_from([1, 2]), seed=st.integers(0, 3))
+def test_halo_plan_interior_boundary_split(rounds, nodes, seed):
+    """The plan's interior/boundary classification is a disjoint cover of
+    the real rows, and interior rows provably read no ghosts: every
+    valid nbr_local entry of an interior row is an owned slot (< cap)."""
+    rng = np.random.default_rng(seed)
+    m = _adapted_mesh(rounds=rounds, cx=0.25 + 0.1 * rng.random())
+    plan, part, nbr, hplan, slots = _plan_for(m, num_nodes=nodes, dev=8 // nodes)
+    S, cap = plan.owned_idx.shape
+    for p in range(S):
+        real = set(np.flatnonzero(plan.owned_idx[p] >= 0).tolist())
+        interior = set(plan.interior_idx[p][plan.interior_idx[p] >= 0].tolist())
+        boundary = set(plan.boundary_idx[p][plan.boundary_idx[p] >= 0].tolist())
+        assert interior | boundary == real
+        assert not (interior & boundary)
+        for r in sorted(interior):
+            nl, nv = plan.nbr_local[p, r], plan.nbr_valid[p, r]
+            assert (nl[nv] < cap).all(), "interior row reads a ghost slot"
+        for r in sorted(boundary):
+            nl, nv = plan.nbr_local[p, r], plan.nbr_valid[p, r]
+            assert (nl[nv] >= cap).any(), "boundary row reads no ghost"
+    mets = plan.metrics
+    assert mets["InteriorCells"] + mets["BoundaryCells"] == m.n
+
+
+def test_stencil_executor_not_keyed_on_steps():
+    """ONE compiled overlapped executor serves every sweep length (steps
+    is traced through the fori_loop), while the pre-split baseline's
+    cache is keyed on steps — and both stay bit-equal to the reference
+    at every length."""
+    import jax
+    from repro.distributed import sharding as shd
+    from repro.mesh import stencil as _st
+
+    m = _adapted_mesh(rounds=1)
+    plan, part, nbr, hplan, slots = _plan_for(m, num_nodes=1, dev=1)
+    mesh = shd.make_node_device_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    u0 = rng.standard_normal(m.n).astype(np.float32)
+    coeff = amr.stencil_coeffs(m, nbr, amr.stable_dt(float(m.sizes().min())))
+    args = _st.halo_args(mesh, plan)
+    u_dev = _st.put_state(mesh, plan, u0)
+
+    _st._stencil_fn.cache_clear()
+    _st._stencil_fn_presplit.cache_clear()
+    for steps in (1, 3, 5):
+        ref = np.asarray(_st.reference_stencil(u0, nbr, nbr >= 0, coeff, steps))
+        ov = plan.unpack_cells(
+            np.asarray(_st.stencil_steps(mesh, plan, u_dev, args, steps)), m.n
+        )
+        ps = plan.unpack_cells(
+            np.asarray(
+                _st.stencil_steps(mesh, plan, u_dev, args, steps, overlap=False)
+            ),
+            m.n,
+        )
+        assert np.array_equal(ref, ov), steps
+        assert np.array_equal(ref, ps), steps
+    assert _st._stencil_fn.cache_info().misses == 1
+    assert _st._stencil_fn_presplit.cache_info().misses == 3
+
+
+def test_distributed_overlap_variants_bit_equal():
+    """8-device mesh: the overlapped executor (jnp and Pallas row
+    update) and the pre-split baseline all produce the reference bits
+    on a real two-level plan with inter-node ghosts."""
+    out = _run("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import partitioner as pt
+        from repro.core.repartition import HierarchicalRepartitioner
+        from repro.distributed import sharding as shd
+        from repro.mesh import halo, simulate
+        from repro.mesh import stencil as _st
+
+        cfg = simulate.SimConfig(events=4, amr_every=0, substeps=2,
+                                 base_level=3, max_level=5)
+        ev = simulate.build_trajectory(cfg)[0]
+        u0 = simulate.initial_field(ev.mesh, cfg)
+        hplan = pt.HierarchyPlan(num_nodes=2, devices_per_node=4)
+        mesh = shd.make_node_device_mesh(2, 4)
+        rp = HierarchicalRepartitioner(
+            jnp.asarray(ev.mesh.centers()), jnp.asarray(ev.weights),
+            plan=hplan, cfg=pt.PartitionerConfig(use_tree=True, curve="hilbert"),
+            capacity=2 * ev.mesh.n, bucket_size=cfg.bucket_size)
+        slots = np.arange(ev.mesh.n, dtype=np.int64)
+        plan = halo.build_halo_plan(
+            slots, rp.partition_of(slots), ev.nbr, ev.coeff,
+            hierarchy=hplan, weights=ev.weights)
+        assert plan.metrics["BoundaryCells"] > 0
+        args = _st.halo_args(mesh, plan)
+        u_dev = _st.put_state(mesh, plan, u0)
+        valid = ev.nbr >= 0
+        for steps in (1, 3):
+            ref = np.asarray(
+                _st.reference_stencil(u0, ev.nbr, valid, ev.coeff, steps))
+            for kw in ({}, {"use_pallas": True}, {"overlap": False}):
+                got = plan.unpack_cells(np.asarray(
+                    _st.stencil_steps(mesh, plan, u_dev, args, steps, **kw)),
+                    ev.mesh.n)
+                assert np.array_equal(ref, got), (steps, kw)
+        print("OK")
+    """)
+    assert "OK" in out

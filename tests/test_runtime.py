@@ -208,6 +208,18 @@ def test_elastic_reshard_mid_serve_subprocess():
         for a, b in zip(r2, ref):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert hrp.stats.rebuilds == rebuilds0
+
+        # a slow-but-alive worker: throughput-weighted re-cut of the
+        # live layout (run-aligned), answers stay bit-equal
+        for step in range(6):
+            for w in range(8):
+                ctl.beat(w, 30.0 + step, step_time=0.6 if w == 7 else 0.1)
+        assert ctl.monitor.stragglers() == [7]
+        assert ctl.check(now=36.0) is None   # no reshard, just the re-cut
+        assert eng.stats.weighted_reslices >= 1
+        r3 = eng.point_location(q)
+        for a, b in zip(r3, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         print('OK elastic', ev.mesh_shape, ev.moved_units)
     """)
     out = subprocess.run(
@@ -216,3 +228,50 @@ def test_elastic_reshard_mid_serve_subprocess():
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     assert "OK elastic" in out.stdout
+
+
+def test_straggler_mitigation_recuts_serving_layout():
+    """Slow-but-alive workers trigger a throughput-weighted re-cut of
+    the engine's chunk layout (no mesh change): the straggler's share of
+    rows shrinks, the engine records a weighted reslice, and check()
+    returns no ReshardEvent. Deterministic via the injected clock."""
+    from repro.runtime.elastic import ElasticServingController
+    from repro.serve.query_engine import DistributedQueryEngine
+
+    rng = np.random.default_rng(5)
+    pts = jnp.asarray(rng.random((2048, 2)), jnp.float32)
+    hrp = HierarchicalRepartitioner(
+        pts, None, HierarchyPlan(num_nodes=2, devices_per_node=2)
+    )
+    idx = hrp.curve_index(32)
+    eng = DistributedQueryEngine(idx, None, ("node", "device"), bucket_cap=32)
+    ctl = ElasticServingController(
+        hrp, eng, devices=list(range(4)),
+        heartbeat_timeout=100.0, straggler_factor=2.0,
+    )
+
+    # no straggler yet: mitigation is a no-op
+    assert ctl.mitigate_stragglers() is None
+    assert eng._row_targets is None
+
+    for step in range(6):
+        now = float(step)
+        for w in range(4):
+            ctl.beat(w, now, step_time=0.5 if w == 3 else 0.1)
+    assert ctl.monitor.stragglers() == [3]
+    assert ctl.check(now=5.0) is None       # alive => no reshard event
+
+    assignment = ctl.mitigate_stragglers()
+    counts = np.bincount(assignment, minlength=4)
+    assert (np.diff(assignment) >= 0).all()  # contiguous shard runs
+    assert counts.sum() == idx.bucket_starts.shape[0] - 1
+    assert counts[3] == counts.min() < counts[:3].min()  # straggler holds least
+    assert eng._row_targets is not None and eng._row_targets.shape == (3,)
+    assert (np.diff(eng._row_targets) >= 0).all()
+    # cuts land on directory bucket boundaries
+    assert np.isin(eng._row_targets, np.asarray(idx.bucket_starts)).all()
+    assert eng.stats.weighted_reslices >= 2   # check() fired one too
+
+    # index swap (new version) drops the stale weighted cuts
+    eng.swap(hrp.curve_index(32))
+    assert eng._row_targets is None
