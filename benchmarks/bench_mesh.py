@@ -259,6 +259,8 @@ def _run(events_cfg=None):
         "incremental_engine_s": inc.engine_s,
         "incremental_move_s": inc.move_s,
         "incremental_stencil_s": inc.stencil_s,
+        "incremental_plan_build_s": inc.plan_build_s,
+        "rebuild_plan_build_s": reb.plan_build_s,
         "stencil_exchange_s": inc.stencil_exchange_s,
         "stencil_interior_s": inc.stencil_interior_s,
         "stencil_boundary_s": inc.stencil_boundary_s,

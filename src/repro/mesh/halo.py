@@ -38,9 +38,31 @@ state exchange for a partition change — moved-only rows for an
 incremental re-slice (a single intra-node hop when the migration plan
 certifies zero inter-node movement), or the full redistribute a rebuild
 pays — with `repro.core.migration` providing the level-aware accounting.
+
+**Plan cost is a hot-path cost.** Plans are rebuilt on every
+repartition event, so host-side construction bounds how *dynamic* a
+dynamic workload can be (the paper's "minimal partitioning cost"
+requirement). The default builders therefore contain **zero per-part
+and zero per-cell Python loops**: every table is produced by numpy
+segment operations — one ``lexsort`` over (part, slot) defines the
+owned layout, sorted-run ranks fill the lane tables, ``searchsorted``
+over a packed (part, slot-rank) key replaces the per-part ghost
+position dicts, and the hop-A dedup is a sorted-unique over
+(owner, dest-node, cell). The canonical ascending-slot ordering makes
+the output a pure function of ``(slot, part, nbr, coeff)``, so the
+vectorized builders are **bit-identical** to the straightforward
+per-part reference builders (:func:`build_halo_plan_legacy`,
+:func:`build_move_plan_legacy`), which are kept as the equivalence-test
+oracle and the ``benchmarks/bench_plans.py`` baseline. Every builder
+records its own walltime as ``PlanBuildSeconds`` in ``plan.metrics``;
+``with_metrics=False`` skips the O(n*K) partition-quality pass
+(``partition_report`` over the face-edge list) for hot-loop callers
+that do not read it — the returned index tables are identical either
+way (:func:`plan_quality_metrics` recovers the skipped report).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -150,7 +172,312 @@ def owners_from_index(index, part_by_slot: np.ndarray, centers) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# plan construction
+# shared plan geometry
+# ---------------------------------------------------------------------------
+
+def _plan_shape(part, hierarchy, num_parts, device_axis):
+    """Resolve (N, D, S, axes) — shared by both builder implementations."""
+    if hierarchy is not None and hierarchy.num_nodes > 1:
+        N, D = int(hierarchy.num_nodes), int(hierarchy.devices_per_node)
+        axes = (hierarchy.node_axis, hierarchy.device_axis)
+    else:
+        N = 1
+        if hierarchy is not None:
+            D = int(hierarchy.num_parts)
+            device_axis = hierarchy.device_axis
+        else:
+            D = int(num_parts) if num_parts is not None else int(part.max()) + 1
+        axes = (device_axis,)
+    return N, D, N * D, axes
+
+
+def _run_ranks(keys_sorted: np.ndarray) -> np.ndarray:
+    """Rank of each element within its run of equal keys (keys sorted)."""
+    m = keys_sorted.shape[0]
+    if m == 0:
+        return np.zeros((0,), np.int64)
+    start = np.ones((m,), bool)
+    start[1:] = keys_sorted[1:] != keys_sorted[:-1]
+    starts = np.nonzero(start)[0]
+    run_id = np.cumsum(start) - 1
+    return np.arange(m, dtype=np.int64) - starts[run_id]
+
+
+def plan_quality_metrics(part, nbr, num_parts, weights=None) -> dict:
+    """The O(n*K) partition-quality report a ``with_metrics=False`` plan
+    skipped: the paper's table columns (`metrics.partition_report`) over
+    the face-edge list. Callers that build plans on the hot loop run it
+    once for reporting instead of on every repartition event."""
+    part = np.asarray(part)
+    n = part.shape[0]
+    w = np.ones((n,), np.float64) if weights is None else np.asarray(weights, np.float64)
+    return _metrics.partition_report(
+        part, w, int(num_parts), edges=_amr.neighbor_edges(nbr)
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan construction — vectorized (the default builder)
+# ---------------------------------------------------------------------------
+
+def build_halo_plan(
+    slot: np.ndarray,
+    part: np.ndarray,
+    nbr: np.ndarray,
+    coeff: np.ndarray,
+    *,
+    hierarchy=None,
+    num_parts: int | None = None,
+    device_axis: str = "device",
+    weights: np.ndarray | None = None,
+    with_metrics: bool = True,
+) -> HaloPlan:
+    """Compile the ghost exchange + local stencil tables for one
+    partition of one mesh.
+
+    ``slot`` (n,) storage-slot ids (stable identity), ``part`` (n,) the
+    owning part per cell (parts name shards), ``nbr``/``coeff`` the
+    (n, K) face tables from :mod:`repro.mesh.amr`. ``hierarchy`` (a
+    `partitioner.HierarchyPlan` with num_nodes > 1) selects the two-hop
+    node-aware exchange; otherwise the plan is flat over
+    ``device_axis``. ``weights`` feed the load columns of the quality
+    metrics (default: unit cell cost). ``with_metrics=False`` skips the
+    O(n*K) `partition_report` quality pass (recoverable later via
+    :func:`plan_quality_metrics`); every other output — including the
+    cheap segment-sum halo metrics — is identical.
+
+    The construction is pure numpy segment ops (no per-part or per-cell
+    Python loops) and is bit-identical to
+    :func:`build_halo_plan_legacy`, the per-part reference builder.
+    """
+    t_build = time.perf_counter()
+    slot = np.asarray(slot, np.int64)
+    part = np.asarray(part)
+    n, K = nbr.shape
+    N, D, S, axes = _plan_shape(part, hierarchy, num_parts, device_axis)
+    part64 = part.astype(np.int64)
+    if n and (part64.min() < 0 or part64.max() >= S):
+        raise ValueError(f"part ids must lie in [0, {S})")
+
+    # slot-rank compression: ordering by slot == ordering by rank, and
+    # ranks stay < n so packed (part, rank) keys cannot overflow int64
+    srank = np.empty((n,), np.int64)
+    srank[np.argsort(slot, kind="stable")] = np.arange(n, dtype=np.int64)
+
+    # --- owned layout: one lexsort over (part, slot) -----------------------
+    ocells = np.lexsort((slot, part64))            # cells by (part, slot)
+    oprow = part64[ocells]                          # owning part per row
+    ocounts = np.bincount(oprow, minlength=S)
+    ostarts = np.concatenate(([0], np.cumsum(ocounts)))
+    orank = np.arange(n, dtype=np.int64) - ostarts[oprow]
+    local_pos = np.empty((n,), np.int64)
+    local_pos[ocells] = orank
+
+    # one (n, K) gather of the neighbor's owner, shared by the ghost
+    # pass and the stencil tables (the dominant cost at ~1M cells)
+    valid = nbr >= 0
+    nbc = np.where(valid, nbr, 0).astype(np.int64)
+    pn = part64[nbc]                                # neighbor's owner
+    same = valid & (pn == part64[:, None])
+    other = valid & ~same                           # ghost-reading lanes
+
+    # --- ghost sets: cross-part face pairs, deduped per (part, slot) ------
+    grow, gcol = np.nonzero(other)
+    gp, gc = part64[grow], nbc[grow, gcol]
+    gr = srank[gc]
+    gord = np.lexsort((gr, gp))
+    gp, gc, gr = gp[gord], gc[gord], gr[gord]
+    if gp.size:
+        keep = np.ones((gp.size,), bool)
+        keep[1:] = (gp[1:] != gp[:-1]) | (gr[1:] != gr[:-1])
+        gp, gc, gr = gp[keep], gc[keep], gr[keep]
+    gcounts = np.bincount(gp, minlength=S)
+    gstarts = np.concatenate(([0], np.cumsum(gcounts)))
+    grank = np.arange(gp.size, dtype=np.int64) - gstarts[gp]
+
+    cap = _roundup(int(ocounts.max()) if n else 0)
+    gcap = _roundup(max(int(gcounts.max()) if gcounts.size else 0, 1))
+
+    # flat destination row of every cell in its owner's (cap-padded) block
+    drow = part64 * cap + local_pos
+    owned_idx = np.full((S * cap,), -1, np.int32)
+    owned_slot = np.full((S * cap,), -1, np.int64)
+    owned_idx[drow] = np.arange(n, dtype=np.int32)
+    owned_slot[drow] = slot
+
+    # --- local stencil tables: one global (part, slot-rank) ghost lookup --
+    loc = np.zeros((n, K), np.int64)
+    loc[same] = local_pos[nbc[same]]
+    if gp.size:
+        gkey = gp * n + gr                          # ascending by build order
+        pos = np.searchsorted(gkey, part64[grow] * n + srank[nbc[grow, gcol]])
+        loc[grow, gcol] = cap + grank[pos]
+    nbr_local = np.zeros((S * cap, K), np.int32)
+    nbr_valid = np.zeros((S * cap, K), bool)
+    coeff_l = np.zeros((S * cap, K), np.float32)
+    nbr_local[drow] = np.where(valid, loc, 0)
+    nbr_valid[drow] = valid
+    coeff_l[drow] = coeff
+    owned_idx = owned_idx.reshape(S, cap)
+    owned_slot = owned_slot.reshape(S, cap)
+    nbr_local = nbr_local.reshape(S, cap, K)
+    nbr_valid = nbr_valid.reshape(S, cap, K)
+    coeff_l = coeff_l.reshape(S, cap, K)
+
+    # --- interior/boundary split -------------------------------------------
+    # a row reads a ghost iff any of its lanes is an `other` lane (valid
+    # neighbor owned elsewhere — exactly the lanes with loc >= cap);
+    # rows beyond the owned count belong to neither set
+    reads_ghost = np.zeros((S * cap,), bool)
+    reads_ghost[drow] = other.any(axis=1)
+    reads_ghost = reads_ghost.reshape(S, cap)
+    real = owned_idx >= 0
+    pi, ri = np.nonzero(real & ~reads_ghost)        # row-major: part, then row
+    pb, rb = np.nonzero(real & reads_ghost)
+    icounts = np.bincount(pi, minlength=S)
+    bcounts = np.bincount(pb, minlength=S)
+    icap = _roundup(max(int(icounts.max()) if icounts.size else 0, 1))
+    bcap = _roundup(max(int(bcounts.max()) if bcounts.size else 0, 1))
+    istarts = np.concatenate(([0], np.cumsum(icounts)))
+    bstarts = np.concatenate(([0], np.cumsum(bcounts)))
+    interior_idx = np.full((S, icap), -1, np.int32)
+    boundary_idx = np.full((S, bcap), -1, np.int32)
+    interior_idx[pi, np.arange(pi.size) - istarts[pi]] = ri
+    boundary_idx[pb, np.arange(pb.size) - bstarts[pb]] = rb
+
+    # --- routing stages ----------------------------------------------------
+    if N == 1:
+        stages, ghost_fetch = _flat_stages_vec(
+            axes[0], S, n, gp, gc, gr, grank, part64, local_pos, gcap
+        )
+    else:
+        stages, ghost_fetch = _two_hop_stages_vec(
+            axes, N, D, n, gp, gc, gr, grank, part64, local_pos, gcap
+        )
+
+    mets = _halo_metrics_vec(
+        part, nbr, ocounts, gcounts, gp, gc, D, stages, weights,
+        with_quality=with_metrics,
+    )
+    mets["InteriorCells"] = int(pi.size)
+    mets["BoundaryCells"] = int(pb.size)
+    mets["PlanBuildSeconds"] = time.perf_counter() - t_build
+    return HaloPlan(
+        axes=axes,
+        num_parts=S,
+        cap=cap,
+        gcap=gcap,
+        K=K,
+        owned_idx=owned_idx,
+        owned_slot=owned_slot,
+        nbr_local=nbr_local,
+        nbr_valid=nbr_valid,
+        coeff=coeff_l,
+        stages=stages,
+        ghost_fetch=ghost_fetch,
+        interior_idx=interior_idx,
+        boundary_idx=boundary_idx,
+        metrics=mets,
+    )
+
+
+def _flat_stages_vec(axis, S, n, gp, gc, gr, grank, part64, local_pos, gcap):
+    """One all_to_all, filled by sorted-run ranks: lane (o -> p) carries
+    o's cells that p ghosts, in p's ghost order (ascending slot)."""
+    gowner = part64[gc]
+    counts = np.bincount(gowner * S + gp, minlength=S * S)
+    hcap = _roundup(int(counts.max()) if counts.size else 1)
+    ord2 = np.lexsort((gr, gowner, gp))             # (p, o, slot) runs
+    t = _run_ranks((gp * S + gowner)[ord2])
+    idx = np.full((S, S, hcap), -1, np.int32)
+    idx[gowner[ord2], gp[ord2], t] = local_pos[gc[ord2]]
+    fetch = np.full((S, gcap), -1, np.int32)
+    fetch[gp[ord2], grank[ord2]] = gowner[ord2] * hcap + t
+    return (Stage(axis=axis, lanes=S, cap=hcap, idx=idx),), fetch
+
+
+def _two_hop_stages_vec(axes, N, D, n, gp, gc, gr, grank, part64, local_pos, gcap):
+    """Node-aware exchange via segment ops: hop A (node axis,
+    per-destination-node dedup = sorted-unique over (owner, dest node,
+    cell)), hop B (device axis, fan-out inside the node).
+
+    Shard ids are node-major (shard = node * D + device). Hop A: owner
+    (n_o, d_o) stages each cell once per destination NODE m; after the
+    node-axis all_to_all the value sits on intermediate device (m, d_o)
+    at flat position n_o * capA + t. Hop B: (m, d_o) restages into
+    device lanes; requester (m, d') fetches at d_o * capB + t2. Ghosts
+    with m == n_o use hop A's self-lane — intra-node by construction.
+    """
+    node_axis, device_axis = axes
+    S = N * D
+    gowner = part64[gc]
+    gnode = gp // D                                  # destination node m
+    # hop A dedup: unique (owner, dest node, slot), ranked by slot
+    ordA = np.lexsort((gr, gnode, gowner))
+    keyA = (gowner * N + gnode) * n + gr             # unique per (o, m, cell)
+    kA = keyA[ordA]
+    keep = np.ones((kA.size,), bool)
+    keep[1:] = kA[1:] != kA[:-1]
+    Ao = gowner[ordA][keep]
+    Am = gnode[ordA][keep]
+    Ac = gc[ordA][keep]
+    Akey = kA[keep]
+    grpA = Ao * N + Am
+    tA = _run_ranks(grpA)
+    sizesA = np.bincount(grpA, minlength=S * N)
+    capA = _roundup(int(sizesA.max()) if Ao.size else 1)
+    idxA = np.full((S, N, capA), -1, np.int32)
+    idxA[Ao, Am, tA] = local_pos[Ac]
+    # per-ghost hop-A slot via one searchsorted on the dedup keys
+    posA = np.searchsorted(Akey, keyA)
+    srcA = (gowner // D) * capA + tA[posA]           # position in q's recvA
+
+    # hop B: intermediate (m, d_o) restages recvA entries to device lanes
+    d_o = gowner % D
+    q = gnode * D + d_o                              # intermediate shard
+    d_req = gp % D
+    ordB = np.lexsort((gr, d_o, gp))                 # (p, d_o, slot) runs
+    t2 = _run_ranks((gp * D + d_o)[ordB])
+    capB = _roundup(int(t2.max()) + 1 if t2.size else 1)
+    idxB = np.full((S, D, capB), -1, np.int32)
+    idxB[q[ordB], d_req[ordB], t2] = srcA[ordB]
+    fetch = np.full((S, gcap), -1, np.int32)
+    fetch[gp[ordB], grank[ordB]] = d_o[ordB] * capB + t2
+    return (
+        Stage(axis=node_axis, lanes=N, cap=capA, idx=idxA),
+        Stage(axis=device_axis, lanes=D, cap=capB, idx=idxB),
+    ), fetch
+
+
+def _halo_metrics_vec(
+    part, nbr, ocounts, gcounts, gp, gc, D, stages, weights, *, with_quality=True
+):
+    """Halo metrics by masked sums over the ghost arrays and lane
+    tables; the O(n*K) `partition_report` pass only when requested."""
+    S = ocounts.shape[0]
+    rep = {}
+    if with_quality:
+        rep = plan_quality_metrics(part, nbr, S, weights)
+    rep.update(_metrics.surface_index(ocounts, gcounts))
+    owner_node = np.asarray(part)[gc] // D
+    inter = int((owner_node != gp // D).sum())
+    rep["IntraNodeGhosts"] = int(gp.size - inter)
+    rep["InterNodeGhosts"] = inter
+    # inter-node float32 payload of ONE exchange (hop A lanes leaving the
+    # node; the flat plan's lanes crossing nodes)
+    st = stages[0]
+    cnt = (st.idx >= 0).sum(axis=2)                  # (S, lanes)
+    o = np.arange(S, dtype=np.int64)[:, None]
+    lane = np.arange(st.lanes, dtype=np.int64)[None, :]
+    mask = (lane // D != o // D) if len(stages) == 1 else (lane != o // D)
+    ib = int(cnt[mask].sum())
+    rep["InterNodeValuesPerExchange"] = ib
+    rep["InterNodeBytesPerExchange"] = 4 * ib
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# plan construction — per-part reference (oracle + bench baseline)
 # ---------------------------------------------------------------------------
 
 def _owned_layout(slot: np.ndarray, part: np.ndarray, num_parts: int):
@@ -179,7 +506,7 @@ def _ghost_sets(owned, part: np.ndarray, nbr: np.ndarray, slot: np.ndarray, num_
     return ghosts
 
 
-def build_halo_plan(
+def build_halo_plan_legacy(
     slot: np.ndarray,
     part: np.ndarray,
     nbr: np.ndarray,
@@ -189,33 +516,20 @@ def build_halo_plan(
     num_parts: int | None = None,
     device_axis: str = "device",
     weights: np.ndarray | None = None,
+    with_metrics: bool = True,
 ) -> HaloPlan:
-    """Compile the ghost exchange + local stencil tables for one
-    partition of one mesh.
+    """Per-part reference implementation of :func:`build_halo_plan`.
 
-    ``slot`` (n,) storage-slot ids (stable identity), ``part`` (n,) the
-    owning part per cell (parts name shards), ``nbr``/``coeff`` the
-    (n, K) face tables from :mod:`repro.mesh.amr`. ``hierarchy`` (a
-    `partitioner.HierarchyPlan` with num_nodes > 1) selects the two-hop
-    node-aware exchange; otherwise the plan is flat over
-    ``device_axis``. ``weights`` feed the load columns of the quality
-    metrics (default: unit cell cost).
+    Straight-line Python loops over parts/cells — O(parts * cells) host
+    work per event. Kept as the equivalence-test oracle (the vectorized
+    builder must reproduce its output bit-for-bit) and as the
+    ``bench_plans`` baseline; do not use on the hot path.
     """
+    t_build = time.perf_counter()
     slot = np.asarray(slot, np.int64)
     part = np.asarray(part)
     n, K = nbr.shape
-    if hierarchy is not None and hierarchy.num_nodes > 1:
-        N, D = int(hierarchy.num_nodes), int(hierarchy.devices_per_node)
-        axes = (hierarchy.node_axis, hierarchy.device_axis)
-    else:
-        N = 1
-        if hierarchy is not None:
-            D = int(hierarchy.num_parts)
-            device_axis = hierarchy.device_axis
-        else:
-            D = int(num_parts) if num_parts is not None else int(part.max()) + 1
-        axes = (device_axis,)
-    S = N * D
+    N, D, S, axes = _plan_shape(part, hierarchy, num_parts, device_axis)
 
     owned, local_pos = _owned_layout(slot, part, S)
     ghosts = _ghost_sets(owned, part, nbr, slot, S)
@@ -251,10 +565,7 @@ def build_halo_plan(
             loc[other] = np.array([cap + gp[int(c)] for c in nb[other]], np.int64)
         nbr_local[p, : cells.size] = np.where(valid, loc, 0)
 
-    # --- interior/boundary split -------------------------------------------
-    # invalid lanes carry loc 0 (< cap), so "reads a ghost" is exactly
-    # valid & (loc >= cap); rows beyond the owned count belong to
-    # neither set (their value is never written and stays 0.0)
+    # interior/boundary split (see build_halo_plan for the invariant)
     reads_ghost = (nbr_valid & (nbr_local >= cap)).any(axis=2)  # (S, cap)
     real = owned_idx >= 0
     int_lists = [np.flatnonzero(real[p] & ~reads_ghost[p]) for p in range(S)]
@@ -267,7 +578,6 @@ def build_halo_plan(
         interior_idx[p, : int_lists[p].size] = int_lists[p]
         boundary_idx[p, : bnd_lists[p].size] = bnd_lists[p]
 
-    # --- routing stages ----------------------------------------------------
     if N == 1:
         stages, ghost_fetch = _flat_stages(
             axes[0], S, owned, ghosts, part, local_pos, gcap
@@ -277,9 +587,12 @@ def build_halo_plan(
             axes, N, D, owned, ghosts, part, slot, local_pos, gcap
         )
 
-    mets = _halo_metrics(part, nbr, owned, ghosts, N, D, stages, weights)
+    mets = _halo_metrics(
+        part, nbr, owned, ghosts, N, D, stages, weights, with_quality=with_metrics
+    )
     mets["InteriorCells"] = int(sum(r.size for r in int_lists))
     mets["BoundaryCells"] = int(sum(r.size for r in bnd_lists))
+    mets["PlanBuildSeconds"] = time.perf_counter() - t_build
     return HaloPlan(
         axes=axes,
         num_parts=S,
@@ -322,15 +635,7 @@ def _flat_stages(axis, S, owned, ghosts, part, local_pos, gcap):
 
 def _two_hop_stages(axes, N, D, owned, ghosts, part, slot, local_pos, gcap):
     """Node-aware exchange: hop A (node axis, per-destination-node
-    deduplicated), hop B (device axis, fan-out inside the node).
-
-    Shard ids are node-major (shard = node * D + device). Hop A: owner
-    (n_o, d_o) stages each cell once per destination NODE m; after the
-    node-axis all_to_all the value sits on intermediate device (m, d_o)
-    at flat position n_o * capA + t. Hop B: (m, d_o) restages into
-    device lanes; requester (m, d') fetches at d_o * capB + t2. Ghosts
-    with m == n_o use hop A's self-lane — intra-node by construction.
-    """
+    deduplicated), hop B (device axis, fan-out inside the node)."""
     node_axis, device_axis = axes
     S = N * D
     # hop A dedup: (owner shard, dest node) -> ordered cell list
@@ -383,14 +688,14 @@ def _two_hop_stages(axes, N, D, owned, ghosts, part, slot, local_pos, gcap):
     ), fetch
 
 
-def _halo_metrics(part, nbr, owned, ghosts, N, D, stages, weights):
+def _halo_metrics(part, nbr, owned, ghosts, N, D, stages, weights, *, with_quality=True):
     """Partition quality of this halo: the paper's table columns through
     the ONE `repro.core.metrics` implementation, plus surface index and
     the per-level ghost/byte split the hierarchy targets."""
-    n = part.shape[0]
     S = N * D
-    w = np.ones((n,), np.float64) if weights is None else np.asarray(weights, np.float64)
-    rep = _metrics.partition_report(part, w, S, edges=_amr.neighbor_edges(nbr))
+    rep = {}
+    if with_quality:
+        rep = plan_quality_metrics(part, nbr, S, weights)
     owned_counts = np.array([o.size for o in owned])
     ghost_counts = np.array([g.size for g in ghosts])
     rep.update(_metrics.surface_index(owned_counts, ghost_counts))
@@ -444,6 +749,7 @@ class MovePlan:
     keep: np.ndarray               # (S, cap_old) bool
     stages: tuple[Stage, ...]
     migration: object
+    metrics: dict = field(default_factory=dict)
 
     @property
     def stage_meta(self) -> tuple:
@@ -466,7 +772,111 @@ def build_move_plan(
     stages EVERY row to its (possibly unchanged) owner — the
     redistribute a cold rebuild pays, carried by the same machinery so
     the walltime comparison is apples-to-apples.
+
+    Vectorized: the old and new layouts are joined on ``owned_slot`` by
+    one sort + ``searchsorted`` (no per-slot dicts), and the lane
+    tables fill by sorted-run ranks — bit-identical to
+    :func:`build_move_plan_legacy`.
     """
+    t_build = time.perf_counter()
+    S = old.owned_idx.shape[0]
+    # old layout rows, joined to the new owner by slot sort (slots are
+    # unique, so ascending slot is the canonical merge order)
+    op_r, ot_r = np.nonzero(old.owned_slot >= 0)
+    oslot = old.owned_slot[op_r, ot_r]
+    oo = np.argsort(oslot, kind="stable")
+    op_r, ot_r, oslot = op_r[oo].astype(np.int64), ot_r[oo].astype(np.int64), oslot[oo]
+    np_r, nt_r = np.nonzero(new.owned_slot >= 0)
+    nslot = new.owned_slot[np_r, nt_r]
+    no = np.argsort(nslot, kind="stable")
+    np_r, nslot = np_r[no].astype(np.int64), nslot[no]
+    pos = np.searchsorted(nslot, oslot)
+    hit = (pos < nslot.size) & (nslot[np.minimum(pos, max(nslot.size - 1, 0))] == oslot)
+    if not hit.all():
+        raise KeyError(int(oslot[~hit][0]))
+    old_part = op_r
+    new_part = np_r[pos]
+    mig = _migration.migration_plan(
+        old_part, new_part, S,
+        hierarchy=hierarchy if (hierarchy is not None and hierarchy.num_nodes > 1) else None,
+    )
+    keep = np.zeros((S, old.cap), bool)
+    if full:
+        mm = np.ones((oslot.size,), bool)
+    else:
+        stay = new_part == old_part
+        keep[old_part[stay], ot_r[stay]] = True
+        mm = ~stay
+    msrc, mdst, mt, mslot = old_part[mm], new_part[mm], ot_r[mm], oslot[mm]
+    if msrc.size == 0:
+        return MovePlan(
+            kind="none", axes=old.axes, cap_old=old.cap, cap_new=new.cap,
+            keep=keep, stages=(), migration=mig,
+            metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
+        )
+
+    if hierarchy is not None and hierarchy.num_nodes > 1:
+        N, D = int(hierarchy.num_nodes), int(hierarchy.devices_per_node)
+        node_local = bool((msrc // D == mdst // D).all())
+        if node_local and not full:
+            # intra-node only: one device-axis hop, lanes = dest device.
+            # The compiled program contains no node-axis collective at
+            # all — node-local migration cannot cross the boundary.
+            lane = mdst % D
+            cap = _roundup(int(np.bincount(msrc * D + lane, minlength=S * D).max()))
+            ordm = np.lexsort((mslot, lane, msrc))
+            r = _run_ranks((msrc * D + lane)[ordm])
+            idx = np.full((S, D, cap), -1, np.int32)
+            idx[msrc[ordm], lane[ordm], r] = mt[ordm]
+            stages = (Stage(axis=hierarchy.device_axis, lanes=D, cap=cap, idx=idx),)
+            kind = "device"
+        else:
+            # two hops: dest node, then dest device inside it
+            m_node = mdst // D
+            capA = _roundup(int(np.bincount(msrc * N + m_node, minlength=S * N).max()))
+            ordA = np.lexsort((mslot, m_node, msrc))
+            tA = _run_ranks((msrc * N + m_node)[ordA])
+            idxA = np.full((S, N, capA), -1, np.int32)
+            idxA[msrc[ordA], m_node[ordA], tA] = mt[ordA]
+            srcA = np.empty((msrc.size,), np.int64)
+            srcA[ordA] = (msrc[ordA] // D) * capA + tA
+            q = m_node * D + msrc % D            # intermediate shard
+            lane = mdst % D
+            capB = _roundup(int(np.bincount(q * D + lane, minlength=S * D).max()))
+            ordB = np.lexsort((mslot, lane, q))
+            t2 = _run_ranks((q * D + lane)[ordB])
+            idxB = np.full((S, D, capB), -1, np.int32)
+            idxB[q[ordB], lane[ordB], t2] = srcA[ordB]
+            stages = (
+                Stage(axis=hierarchy.node_axis, lanes=N, cap=capA, idx=idxA),
+                Stage(axis=hierarchy.device_axis, lanes=D, cap=capB, idx=idxB),
+            )
+            kind = "hier"
+    else:
+        cap = _roundup(int(np.bincount(msrc * S + mdst, minlength=S * S).max()))
+        ordm = np.lexsort((mslot, mdst, msrc))
+        r = _run_ranks((msrc * S + mdst)[ordm])
+        idx = np.full((S, S, cap), -1, np.int32)
+        idx[msrc[ordm], mdst[ordm], r] = mt[ordm]
+        stages = (Stage(axis=old.axes[-1], lanes=S, cap=cap, idx=idx),)
+        kind = "flat"
+    return MovePlan(
+        kind=kind, axes=old.axes, cap_old=old.cap, cap_new=new.cap,
+        keep=keep, stages=stages, migration=mig,
+        metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
+    )
+
+
+def build_move_plan_legacy(
+    old: HaloPlan,
+    new: HaloPlan,
+    *,
+    hierarchy=None,
+    full: bool = False,
+) -> MovePlan:
+    """Per-slot dict reference implementation of :func:`build_move_plan`
+    (the equivalence-test oracle and ``bench_plans`` baseline)."""
+    t_build = time.perf_counter()
     S = old.owned_idx.shape[0]
     # old shard + local position per slot
     slot_old: dict[int, tuple[int, int]] = {}
@@ -499,15 +909,13 @@ def build_move_plan(
         return MovePlan(
             kind="none", axes=old.axes, cap_old=old.cap, cap_new=new.cap,
             keep=keep, stages=(), migration=mig,
+            metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
         )
 
     if hierarchy is not None and hierarchy.num_nodes > 1:
         N, D = int(hierarchy.num_nodes), int(hierarchy.devices_per_node)
         node_local = all(src // D == dst // D for _, src, dst, _ in moved)
         if node_local and not full:
-            # intra-node only: one device-axis hop, lanes = dest device.
-            # The compiled program contains no node-axis collective at
-            # all — node-local migration cannot cross the boundary.
             counts = np.zeros((S, D), np.int64)
             for _, src, dst, _ in moved:
                 counts[src, dst % D] += 1
@@ -567,4 +975,5 @@ def build_move_plan(
     return MovePlan(
         kind=kind, axes=old.axes, cap_old=old.cap, cap_new=new.cap,
         keep=keep, stages=stages, migration=mig,
+        metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
     )

@@ -1,0 +1,264 @@
+"""Vectorized plan builders vs the per-part legacy oracle — bit-identity.
+
+The contract that makes the segment-op rewrite of `repro.mesh.halo` a
+pure perf change: every output field of `build_halo_plan` /
+`build_move_plan` is ``np.array_equal`` to the legacy loop builders'
+(the ascending-slot canonical order and stable fills are deterministic,
+so exact equality is the spec, not a tolerance). The matrix covers flat
+and (N, D) hierarchies, scattered and SFC-compact partitions,
+non-contiguous slot ids, empty-ghost and empty parts, cap-rounding
+boundaries, and every move-plan kind (incremental / full /
+``kind="none"`` / node-local device-certified).
+
+No jax required: plan construction is host-side numpy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.mesh import amr
+from repro.mesh import halo
+
+
+@dataclass(frozen=True)
+class _Hier:
+    """Hierarchy stand-in with the fields the halo/move builders read
+    (matches `partitioner.HierarchyPlan` without importing jax)."""
+
+    num_nodes: int
+    devices_per_node: int
+    node_axis: str = "node"
+    device_axis: str = "device"
+    inter_node_cost: float = 4.0
+
+    @property
+    def num_parts(self) -> int:
+        return self.num_nodes * self.devices_per_node
+
+
+def _mesh(seed: int, adapt_steps: int, base_level: int = 3):
+    mesh = amr.uniform_mesh(2, base_level, base_level + 2)
+    rng = np.random.default_rng(seed)
+    for _ in range(adapt_steps):
+        c = rng.random(2).astype(np.float64)
+        ref, coar = amr.adapt_masks(mesh, c)
+        mesh, _ = amr.refine_coarsen(mesh, ref, coar)
+    nbr = amr.face_neighbors(mesh)
+    coeff = amr.stencil_coeffs(mesh, nbr, amr.stable_dt(mesh))
+    return mesh, nbr, coeff
+
+
+def _slots(n: int, seed: int, contiguous: bool) -> np.ndarray:
+    if contiguous:
+        return np.arange(n, dtype=np.int64)
+    rng = np.random.default_rng(seed + 1000)
+    return rng.choice(3 * n, size=n, replace=False).astype(np.int64)
+
+
+def _partition(mesh, S: int, seed: int, sfc: bool) -> np.ndarray:
+    rng = np.random.default_rng(seed + 2000)
+    if sfc:
+        order = np.argsort(amr._pack(mesh.level, mesh.ij), kind="stable")
+        part = np.empty((mesh.n,), np.int32)
+        bounds = np.sort(rng.choice(mesh.n + 1, size=S - 1, replace=True))
+        bounds = np.concatenate(([0], bounds, [mesh.n]))
+        for p in range(S):
+            part[order[bounds[p] : bounds[p + 1]]] = p
+        return part
+    return rng.integers(0, S, mesh.n).astype(np.int32)
+
+
+def assert_halo_equal(a: halo.HaloPlan, b: halo.HaloPlan) -> None:
+    assert (a.axes, a.num_parts, a.cap, a.gcap, a.K) == (
+        b.axes, b.num_parts, b.cap, b.gcap, b.K
+    )
+    for f in (
+        "owned_idx", "owned_slot", "nbr_local", "nbr_valid", "coeff",
+        "ghost_fetch", "interior_idx", "boundary_idx",
+    ):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.stage_meta == b.stage_meta
+    for sa, sb in zip(a.stages, b.stages):
+        assert np.array_equal(sa.idx, sb.idx), sa.axis
+    ma = {k: v for k, v in a.metrics.items() if k != "PlanBuildSeconds"}
+    mb = {k: v for k, v in b.metrics.items() if k != "PlanBuildSeconds"}
+    assert ma.keys() == mb.keys()
+    for k in ma:
+        assert np.allclose(ma[k], mb[k]), k
+
+
+def assert_move_equal(a: halo.MovePlan, b: halo.MovePlan) -> None:
+    assert (a.kind, a.axes, a.cap_old, a.cap_new) == (
+        b.kind, b.axes, b.cap_old, b.cap_new
+    )
+    assert np.array_equal(a.keep, b.keep)
+    assert a.stage_meta == b.stage_meta
+    for sa, sb in zip(a.stages, b.stages):
+        assert np.array_equal(sa.idx, sb.idx), sa.axis
+    assert np.array_equal(a.migration.send_counts, b.migration.send_counts)
+    assert a.migration.total_moved == b.migration.total_moved
+    assert getattr(a.migration, "inter_moved", None) == getattr(
+        b.migration, "inter_moved", None
+    )
+
+
+def _build_pair(slot, part, nbr, coeff, hier, S):
+    kw = dict(hierarchy=hier) if hier is not None else dict(num_parts=S)
+    return (
+        halo.build_halo_plan(slot, part, nbr, coeff, **kw),
+        halo.build_halo_plan_legacy(slot, part, nbr, coeff, **kw),
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 5),
+    adapt=st.integers(0, 2),
+    nodes=st.sampled_from([1, 2]),
+    dev=st.sampled_from([2, 4]),
+    sfc=st.booleans(),
+    contiguous=st.booleans(),
+)
+def test_halo_plan_bit_identical(seed, adapt, nodes, dev, sfc, contiguous):
+    mesh, nbr, coeff = _mesh(seed, adapt)
+    S = nodes * dev
+    hier = _Hier(nodes, dev) if nodes > 1 else None
+    slot = _slots(mesh.n, seed, contiguous)
+    part = _partition(mesh, S, seed, sfc)
+    pv, pl = _build_pair(slot, part, nbr, coeff, hier, S)
+    assert_halo_equal(pv, pl)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 5),
+    nodes=st.sampled_from([1, 2]),
+    dev=st.sampled_from([2, 4]),
+    full=st.booleans(),
+    frac=st.floats(0.0, 0.4),
+)
+def test_move_plan_bit_identical(seed, nodes, dev, full, frac):
+    mesh, nbr, coeff = _mesh(seed, 1)
+    S = nodes * dev
+    hier = _Hier(nodes, dev) if nodes > 1 else None
+    slot = _slots(mesh.n, seed, contiguous=False)
+    part = _partition(mesh, S, seed, sfc=True)
+    rng = np.random.default_rng(seed + 3000)
+    part2 = part.copy()
+    sw = rng.random(mesh.n) < frac
+    part2[sw] = rng.integers(0, S, int(sw.sum()))
+    pv, pl = _build_pair(slot, part, nbr, coeff, hier, S)
+    pv2, pl2 = _build_pair(slot, part2, nbr, coeff, hier, S)
+    kw = dict(hierarchy=hier, full=full)
+    assert_move_equal(
+        halo.build_move_plan(pv, pv2, **kw),
+        halo.build_move_plan_legacy(pl, pl2, **kw),
+    )
+
+
+def test_move_plan_kind_none():
+    mesh, nbr, coeff = _mesh(0, 1)
+    slot = _slots(mesh.n, 0, contiguous=True)
+    part = _partition(mesh, 4, 0, sfc=True)
+    pv, pl = _build_pair(slot, part, nbr, coeff, None, 4)
+    mv, ml = halo.build_move_plan(pv, pv), halo.build_move_plan_legacy(pl, pl)
+    assert mv.kind == ml.kind == "none"
+    assert_move_equal(mv, ml)
+
+
+def test_move_plan_node_local_device_certified():
+    # moves stay within each part's node -> the single device-axis hop
+    mesh, nbr, coeff = _mesh(1, 1)
+    hier = _Hier(2, 4)
+    slot = _slots(mesh.n, 1, contiguous=False)
+    part = _partition(mesh, 8, 1, sfc=True)
+    rng = np.random.default_rng(7)
+    part2 = part.copy()
+    sw = rng.random(mesh.n) < 0.2
+    part2[sw] = (part[sw] // 4) * 4 + rng.integers(0, 4, int(sw.sum()))
+    pv, pl = _build_pair(slot, part, nbr, coeff, hier, 8)
+    pv2, pl2 = _build_pair(slot, part2, nbr, coeff, hier, 8)
+    mv = halo.build_move_plan(pv, pv2, hierarchy=hier)
+    ml = halo.build_move_plan_legacy(pl, pl2, hierarchy=hier)
+    assert mv.kind == ml.kind
+    if int(mv.migration.total_moved):
+        assert mv.kind == "device"
+    assert_move_equal(mv, ml)
+
+
+def test_empty_ghost_and_empty_parts():
+    # one part owns everything: other parts are empty, nobody has ghosts
+    mesh, nbr, coeff = _mesh(2, 0)
+    slot = np.arange(mesh.n, dtype=np.int64)
+    part = np.zeros((mesh.n,), np.int32)
+    pv, pl = _build_pair(slot, part, nbr, coeff, None, 4)
+    assert_halo_equal(pv, pl)
+    assert pv.metrics["InterNodeGhosts"] == 0
+    assert pv.metrics["IntraNodeGhosts"] == 0
+    # hierarchical shape of the same degenerate assignment
+    pvh, plh = _build_pair(slot, part, nbr, coeff, _Hier(2, 2), 4)
+    assert_halo_equal(pvh, plh)
+
+
+@pytest.mark.parametrize("split", [(8, 8), (7, 9), (9, 7)])
+def test_cap_rounding_boundaries(split):
+    # 16 cells split right at / around the q=8 rounding quantum
+    mesh = amr.uniform_mesh(2, 2, 4)   # 16 cells
+    nbr = amr.face_neighbors(mesh)
+    coeff = amr.stencil_coeffs(mesh, nbr, amr.stable_dt(mesh))
+    slot = np.arange(mesh.n, dtype=np.int64)
+    a, _ = split
+    part = np.zeros((mesh.n,), np.int32)
+    part[a:] = 1
+    pv, pl = _build_pair(slot, part, nbr, coeff, None, 2)
+    assert_halo_equal(pv, pl)
+
+
+def test_with_metrics_false_identical_otherwise():
+    mesh, nbr, coeff = _mesh(3, 1)
+    hier = _Hier(2, 4)
+    slot = _slots(mesh.n, 3, contiguous=False)
+    part = _partition(mesh, 8, 3, sfc=True)
+    full = halo.build_halo_plan(slot, part, nbr, coeff, hierarchy=hier)
+    lean = halo.build_halo_plan(
+        slot, part, nbr, coeff, hierarchy=hier, with_metrics=False
+    )
+    # quality report absent, everything else identical
+    assert "MaxEdgeCut" in full.metrics and "MaxEdgeCut" not in lean.metrics
+    for f in (
+        "owned_idx", "owned_slot", "nbr_local", "nbr_valid", "coeff",
+        "ghost_fetch", "interior_idx", "boundary_idx",
+    ):
+        assert np.array_equal(getattr(full, f), getattr(lean, f)), f
+    assert full.stage_meta == lean.stage_meta
+    for sa, sb in zip(full.stages, lean.stages):
+        assert np.array_equal(sa.idx, sb.idx)
+    # the cheap halo metrics stay, and the skipped report is recoverable
+    for k in ("MaxSurfaceIndex", "InterNodeGhosts", "InterNodeBytesPerExchange"):
+        assert lean.metrics[k] == full.metrics[k]
+    rec = halo.plan_quality_metrics(part, nbr, 8)
+    assert rec["MaxEdgeCut"] == full.metrics["MaxEdgeCut"]
+    # the legacy builder honors the same flag
+    lean_l = halo.build_halo_plan_legacy(
+        slot, part, nbr, coeff, hierarchy=hier, with_metrics=False
+    )
+    assert_halo_equal(lean, lean_l)
+
+
+def test_plan_build_seconds_recorded():
+    mesh, nbr, coeff = _mesh(4, 0)
+    slot = np.arange(mesh.n, dtype=np.int64)
+    part = _partition(mesh, 4, 4, sfc=True)
+    pv = halo.build_halo_plan(slot, part, nbr, coeff, num_parts=4)
+    assert pv.metrics["PlanBuildSeconds"] > 0
+    part2 = _partition(mesh, 4, 5, sfc=True)
+    pv2 = halo.build_halo_plan(slot, part2, nbr, coeff, num_parts=4)
+    mv = halo.build_move_plan(pv, pv2)
+    assert mv.metrics["PlanBuildSeconds"] > 0
+    # the "none" early return records it too
+    assert halo.build_move_plan(pv, pv).metrics["PlanBuildSeconds"] > 0
