@@ -261,6 +261,9 @@ def _run(events_cfg=None):
         "incremental_stencil_s": inc.stencil_s,
         "incremental_plan_build_s": inc.plan_build_s,
         "rebuild_plan_build_s": reb.plan_build_s,
+        "incremental_plan_cache_hits": inc.plan_cache_hits,
+        "incremental_plan_cache_misses": inc.plan_cache_misses,
+        "incremental_plan_patched_rows": inc.plan_patched_rows,
         "stencil_exchange_s": inc.stencil_exchange_s,
         "stencil_interior_s": inc.stencil_interior_s,
         "stencil_boundary_s": inc.stencil_boundary_s,

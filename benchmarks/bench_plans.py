@@ -7,7 +7,7 @@ that host cost — no jax devices are involved: `build_halo_plan` /
 `build_move_plan` are pure-numpy compilations of the exchange tables,
 so the "devices" here are plan shards.
 
-Two cases:
+Three cases:
 
 * **smoke gate** — an adapted AMR mesh (~20k cells) on 8 shards
   (2 nodes x 4 devices, the two-hop plan with the heaviest legacy
@@ -19,11 +19,22 @@ Two cases:
   cells) on 64 shards (8 nodes x 8 devices), vectorized builders only:
   the regime ROADMAP names, where the legacy per-cell loops are not
   runnable in reasonable time. Reported, not compared.
+* **event sequence** — the same 64-shard / ~1M-cell mesh driven
+  through a 12-event reslice schedule shaped like BENCH_mesh's (mostly
+  single-node intra reslices, a couple of global inter reslices, one
+  large shift that exceeds the patch threshold). Every event is built
+  twice: from scratch and through a `plan_cache.PlanCache`. Gates:
+  bit-identical on EVERY event AND cached-vs-scratch build speedup > 1
+  on the reslice-only (intra) events.
 
-``--smoke`` runs both, writes ``BENCH_plans.json`` and prints the
+``--profile`` additionally emits the per-stage build breakdown (slot
+sort / owned lexsort / owner gather / ghost dedup / tables / stage
+packing seconds, and the patch-path analogues) into the artifact.
+
+``--smoke`` runs all three, writes ``BENCH_plans.json`` and prints the
 summary as the final stdout line (nightly CI).
 
-    PYTHONPATH=src python benchmarks/bench_plans.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_plans.py [--smoke] [--profile]
 """
 from __future__ import annotations
 
@@ -38,6 +49,7 @@ except ImportError:  # run as a script: the benchmarks dir itself is on sys.path
     from _artifact import write_artifact
 
 SMOKE = "--smoke" in sys.argv
+PROFILE = "--profile" in sys.argv
 
 
 def _sfc_partition(mesh, num_parts: int) -> np.ndarray:
@@ -163,14 +175,14 @@ def _compare_case(base_level: int, nodes: int, dev: int, reps: int = 5):
     }
 
 
-def _large_case(base_level: int = 10, nodes: int = 8, dev: int = 8):
+def _large_case(base_level: int = 10, nodes: int = 8, dev: int = 8, mesh_data=None):
     """64 shards / ~1M cells, vectorized builders only (the legacy path
-    is the wall this PR removes — it does not run here)."""
+    is the wall PR 8 removed — it does not run here)."""
     from repro.core import partitioner as pt
     from repro.mesh import halo
 
     hplan = pt.HierarchyPlan(num_nodes=nodes, devices_per_node=dev)
-    mesh, nbr, coeff, slot = _mesh_case(base_level, adapt_steps=0)
+    mesh, nbr, coeff, slot = mesh_data or _mesh_case(base_level, adapt_steps=0)
     S = nodes * dev
     part = _sfc_partition(mesh, S)
     part2 = _drift(part, mesh, S)
@@ -191,6 +203,115 @@ def _large_case(base_level: int = 10, nodes: int = 8, dev: int = 8):
         ),
         "large_moved_rows": int(mv.migration.total_moved),
     }
+
+
+def _event_sequence_case(
+    nodes: int = 8, dev: int = 8, events: int = 12, mesh_data=None,
+    profile: bool = False,
+):
+    """Reslice-event schedule at 64 shards / ~1M cells: every event is
+    built from scratch AND through a ``PlanCache``; bit-equality is
+    checked per event, speedup is gated on the intra (reslice-only)
+    events — the profile BENCH_mesh's incremental driver produces
+    (mostly single-node reslices)."""
+    from repro.core import partitioner as pt
+    from repro.mesh import amr, halo
+
+    hplan = pt.HierarchyPlan(num_nodes=nodes, devices_per_node=dev)
+    mesh, nbr, coeff, slot = mesh_data or _mesh_case(10, adapt_steps=0)
+    S = nodes * dev
+    n = mesh.n
+    order = np.argsort(amr._pack(mesh.level, mesh.ij), kind="stable")
+    bounds = (np.arange(S + 1) * n) // S
+    rng = np.random.default_rng(0)
+    cache = halo.PlanCache()
+    prof_scratch: dict | None = {} if profile else None
+    prof_cached: dict | None = {} if profile else None
+
+    def part_from(b):
+        part = np.empty((n,), np.int32)
+        for p in range(S):
+            part[order[b[p] : b[p + 1]]] = p
+        return part
+
+    bit_equal = True
+    recs = []
+    prev_s = prev_c = None
+    for t in range(events):
+        if t == 0:
+            kind = "init"
+        elif t == 6:
+            kind = "large"        # > patch threshold: scratch-fallback path
+        elif t % 5 == 0:
+            kind = "inter"        # global, small: every boundary shifts
+        else:
+            kind = "intra"        # one node's internal boundaries only
+        if kind == "intra":
+            node = int(rng.integers(0, nodes))
+            lo, hi = bounds[node * dev], bounds[(node + 1) * dev]
+            j = slice(node * dev + 1, (node + 1) * dev)
+            shift = rng.integers(-(n // (8 * S)), n // (8 * S) + 1, dev - 1)
+            bounds[j] = np.sort(np.clip(bounds[j] + shift, lo, hi))
+        elif kind == "inter":
+            shift = rng.integers(-(n // (16 * S)), n // (16 * S) + 1, S - 1)
+            bounds[1:-1] = np.sort(np.clip(bounds[1:-1] + shift, 1, n - 1))
+        elif kind == "large":
+            bounds[1:-1] = np.clip(bounds[1:-1] + n // (2 * S), 1, n - 1)
+        part = part_from(bounds)
+
+        t0 = time.perf_counter()
+        ps = halo.build_halo_plan(
+            slot, part, nbr, coeff, hierarchy=hplan, with_metrics=False,
+            profile=prof_scratch,
+        )
+        t_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pc = halo.build_halo_plan(
+            slot, part, nbr, coeff, hierarchy=hplan, with_metrics=False,
+            cache=cache, topo_token=0, profile=prof_cached,
+        )
+        t_c = time.perf_counter() - t0
+        bit_equal = bit_equal and _plans_equal(ps, pc)
+        rec = dict(kind=kind, halo_scratch_s=t_s, halo_cached_s=t_c,
+                   patched=int(pc.metrics["PatchedRows"]))
+        if prev_s is not None:
+            t0 = time.perf_counter()
+            ms = halo.build_move_plan(prev_s, ps, hierarchy=hplan)
+            rec["move_scratch_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            mc = halo.build_move_plan(prev_c, pc, hierarchy=hplan, cache=cache)
+            rec["move_cached_s"] = time.perf_counter() - t0
+            bit_equal = bit_equal and _move_equal(ms, mc)
+        recs.append(rec)
+        prev_s, prev_c = ps, pc
+
+    intra = [r for r in recs if r["kind"] == "intra"]
+    med = lambda xs: float(np.median(xs)) if xs else 0.0
+    out = {
+        "ev_cells": n,
+        "ev_parts": S,
+        "ev_events": events,
+        "ev_intra_events": len(intra),
+        "ev_bit_equal": bit_equal,
+        "ev_intra_scratch_s": med([r["halo_scratch_s"] for r in intra]),
+        "ev_intra_cached_s": med([r["halo_cached_s"] for r in intra]),
+        "ev_intra_speedup": med(
+            [r["halo_scratch_s"] / max(r["halo_cached_s"], 1e-9) for r in intra]
+        ),
+        "ev_intra_patched_rows": med([r["patched"] for r in intra]),
+        "ev_move_scratch_s": med([r["move_scratch_s"] for r in recs if "move_scratch_s" in r]),
+        "ev_move_cached_s": med([r["move_cached_s"] for r in recs if "move_cached_s" in r]),
+        "ev_cache_halo_hits": cache.stats.halo_hits,
+        "ev_cache_halo_misses": cache.stats.halo_misses,
+        "ev_cache_move_hits": cache.stats.move_hits,
+        "ev_patched_rows_total": cache.stats.patched_rows,
+    }
+    if profile:
+        for k, v in (prof_scratch or {}).items():
+            out[f"prof_scratch_{k}"] = v
+        for k, v in (prof_cached or {}).items():
+            out[f"prof_cached_{k}"] = v
+    return out
 
 
 def _rows_from(c: dict) -> list[tuple]:
@@ -222,13 +343,25 @@ def smoke_main() -> int:
         # gap cannot be hidden by constant factors
         c = _compare_case(base_level=8, nodes=2, dev=4)
     rows = _rows_from(c)
-    big = _large_case()
+    big_mesh = _mesh_case(10, adapt_steps=0)  # shared: _large_case + events
+    big = _large_case(mesh_data=big_mesh)
+    ev = _event_sequence_case(mesh_data=big_mesh, profile=PROFILE)
     rows.append(
         (
             f"plans/halo_vectorized/n={big['large_cells']}/S={big['large_parts']}",
             big["large_halo_build_s"] * 1e6,
             f"ghosts={big['large_ghosts']};"
             f"move_us={big['large_move_build_s'] * 1e6:.1f};legacy=not-run",
+        )
+    )
+    rows.append(
+        (
+            f"plans/halo_cached/n={ev['ev_cells']}/S={ev['ev_parts']}",
+            ev["ev_intra_cached_s"] * 1e6,
+            f"bit_equal={ev['ev_bit_equal']};"
+            f"scratch_us={ev['ev_intra_scratch_s'] * 1e6:.1f};"
+            f"speedup={ev['ev_intra_speedup']:.1f}x;"
+            f"patched_rows={ev['ev_intra_patched_rows']:.0f}",
         )
     )
     print("name,us_per_call,derived")
@@ -239,7 +372,8 @@ def smoke_main() -> int:
     ok_halo = c["halo_build_speedup"] > 1.0
     ok_move = c["move_build_speedup"] > 1.0
     ok_large = big["large_halo_build_s"] > 0 and big["large_cells"] >= 10**6
-    passed = ok_bits and ok_halo and ok_move and ok_large
+    ok_ev = ev["ev_bit_equal"] and ev["ev_intra_speedup"] > 1.0
+    passed = ok_bits and ok_halo and ok_move and ok_large and ok_ev
     if passed:
         print(
             f"PASS: vectorized plans bit-identical to legacy at "
@@ -248,16 +382,20 @@ def smoke_main() -> int:
             f"{c['move_build_speedup']:.1f}x; 64-shard/"
             f"{big['large_cells']}-cell halo plan built in "
             f"{big['large_halo_build_s'] * 1e3:.0f} ms (move "
-            f"{big['large_move_build_s'] * 1e3:.0f} ms)"
+            f"{big['large_move_build_s'] * 1e3:.0f} ms); event cache "
+            f"{ev['ev_intra_speedup']:.1f}x on reslice events, bit-equal "
+            f"across {ev['ev_events']} events"
         )
     else:
         print(
             f"FAIL: bit_equal={ok_bits}, "
             f"halo_speedup={c['halo_build_speedup']:.2f}x (need >1), "
             f"move_speedup={c['move_build_speedup']:.2f}x (need >1), "
-            f"large_case_ok={ok_large}"
+            f"large_case_ok={ok_large}, "
+            f"ev_bit_equal={ev['ev_bit_equal']}, "
+            f"ev_intra_speedup={ev['ev_intra_speedup']:.2f}x (need >1)"
         )
-    stats = {**c, **big}
+    stats = {**c, **big, **ev}
     write_artifact("plans", stats, passed=passed, echo=True)
     return 0 if passed else 1
 
@@ -268,3 +406,11 @@ if __name__ == "__main__":
     print("name,us_per_call,derived")
     for name, us, derived in bench_plans_rows():
         print(f"{name},{us:.1f},{derived}")
+    if PROFILE:
+        # small-scale event sequence: per-stage scratch vs patch breakdown
+        ev = _event_sequence_case(nodes=2, dev=4, mesh_data=_mesh_case(7, 0),
+                                  profile=True)
+        print("stage,seconds")
+        for k in sorted(ev):
+            if k.startswith("prof_"):
+                print(f"{k[5:]},{ev[k]:.6f}")

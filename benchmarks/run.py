@@ -24,6 +24,9 @@ def compare_artifacts(old_path: str, new_path: str | None = None) -> int:
 
     Numeric metrics get old/new/delta/percent columns; non-numeric ones
     (bools, lists) print old -> new and are flagged when they changed.
+    A key present in only one artifact prints ``n/a`` for the missing
+    side and no delta — suites gain and retire metrics across PRs, and
+    a comparison against an older artifact must stay readable.
     Returns 1 when either artifact records a failed smoke gate, else 0 —
     regressions in individual metrics are reported, not gated, because
     what counts as "worse" is metric-specific (the suites' own gates
@@ -31,6 +34,10 @@ def compare_artifacts(old_path: str, new_path: str | None = None) -> int:
     with open(old_path) as f:
         old = json.load(f)
     if new_path is None:
+        if "name" not in old:
+            print(f"ERROR: {old_path} has no 'name'; pass NEW.json explicitly",
+                  file=sys.stderr)
+            return 2
         new_path = f"BENCH_{old['name']}.json"
     with open(new_path) as f:
         new = json.load(f)
@@ -42,10 +49,15 @@ def compare_artifacts(old_path: str, new_path: str | None = None) -> int:
     om, nm = old.get("metrics", {}), new.get("metrics", {})
     keys = sorted(set(om) | set(nm))
     width = max((len(k) for k in keys), default=4)
-    print(f"# {old['name']}: {old_path} -> {new_path}")
+    print(f"# {old.get('name', '?')}: {old_path} -> {new_path}")
     print(f"{'metric':<{width}}  {'old':>14}  {'new':>14}  {'delta':>14}  {'pct':>8}")
     for k in keys:
         a, b = om.get(k), nm.get(k)
+        if k not in om or k not in nm:
+            lhs = "n/a" if k not in om else f"{a!r}"
+            rhs = "n/a" if k not in nm else f"{b!r}"
+            print(f"{k:<{width}}  {lhs:>14}  {rhs:>14}  {'n/a':>14}  {'n/a':>8}")
+            continue
         num = (
             isinstance(a, (int, float)) and not isinstance(a, bool)
             and isinstance(b, (int, float)) and not isinstance(b, bool)

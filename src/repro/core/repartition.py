@@ -252,6 +252,12 @@ class Repartitioner:
         # a CurveIndex can detect staleness and refresh incrementally
         self._index_version = 0
         self._index_cache: tuple[tuple[int, int], _ci.CurveIndex] | None = None
+        # bumped only when the tracked POINT POPULATION changes (insert /
+        # delete) — never on re-slices or rebuilds, which move ownership
+        # of the same points. Plan caches (repro.mesh.plan_cache) key
+        # their topology tier on this: AMR-free events can reuse every
+        # adjacency-derived structure.
+        self.topology_version = 0
 
         self.dps = _dyn.from_points(
             points,
@@ -502,6 +508,7 @@ class Repartitioner:
         else:
             self._keys = self._keys.at[free].set(self._keys_in_frame(points))
             self._resort()
+        self.topology_version += 1
         return free
 
     def delete(self, slot_ids: jax.Array) -> None:
@@ -521,6 +528,7 @@ class Repartitioner:
         else:
             self._keys = self._keys.at[slot_ids].set(jnp.uint32(KEY_SENTINEL))
             self._resort()
+        self.topology_version += 1
 
     # -- tree-mode bucket statistics -----------------------------------------
 

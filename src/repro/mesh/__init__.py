@@ -1,6 +1,6 @@
 """Mesh application layer: adaptive meshes + halo exchange + distributed
 stencil on the partition core (the paper's primary workload)."""
-from repro.mesh import amr, halo, simulate, stencil  # noqa: F401
+from repro.mesh import amr, halo, plan_cache, simulate, stencil  # noqa: F401
 from repro.mesh.amr import (  # noqa: F401
     AMRMesh,
     Transfer,
@@ -21,6 +21,7 @@ from repro.mesh.halo import (  # noqa: F401
     owners_from_index,
     plan_quality_metrics,
 )
+from repro.mesh.plan_cache import PlanCache, PlanCacheStats  # noqa: F401
 from repro.mesh.simulate import (  # noqa: F401
     SimConfig,
     build_trajectory,

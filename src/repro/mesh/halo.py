@@ -80,6 +80,27 @@ def _roundup(x: int, q: int = 8) -> int:
     return max(q, ((int(x) + q - 1) // q) * q)
 
 
+class _ProfTimer:
+    """Accumulates per-stage build walltime into a caller-owned dict.
+
+    A no-op when ``sink`` is None, so the hot path pays one branch per
+    section. Keys accumulate, so patched and scratch sections of one
+    bench run can share a sink."""
+
+    __slots__ = ("sink", "t")
+
+    def __init__(self, sink):
+        self.sink = sink
+        self.t = time.perf_counter() if sink is not None else 0.0
+
+    def mark(self, key):
+        if self.sink is None:
+            return
+        now = time.perf_counter()
+        self.sink[key] = self.sink.get(key, 0.0) + (now - self.t)
+        self.t = now
+
+
 @dataclass(frozen=True)
 class Stage:
     """One all_to_all hop of a routing plan.
@@ -231,6 +252,11 @@ def build_halo_plan(
     device_axis: str = "device",
     weights: np.ndarray | None = None,
     with_metrics: bool = True,
+    cache=None,
+    topo_token=None,
+    profile: dict | None = None,
+    _topo=None,
+    _capture: dict | None = None,
 ) -> HaloPlan:
     """Compile the ghost exchange + local stencil tables for one
     partition of one mesh.
@@ -246,11 +272,30 @@ def build_halo_plan(
     :func:`plan_quality_metrics`); every other output — including the
     cheap segment-sum halo metrics — is identical.
 
+    ``cache`` (a :class:`repro.mesh.plan_cache.PlanCache`) persists the
+    construction intermediates across repartition events and
+    delta-patches only the part segments whose owner set changed — the
+    output is bit-identical to the from-scratch build (see
+    ``plan_cache``). ``topo_token`` keys the cached topology state (pass
+    the engine's ``topology_version``); a changed token forces a
+    topology refresh. ``profile`` (a dict) accumulates per-stage build
+    seconds. ``_topo``/``_capture`` are the cache's private handshake
+    with the scratch builder.
+
     The construction is pure numpy segment ops (no per-part or per-cell
     Python loops) and is bit-identical to
     :func:`build_halo_plan_legacy`, the per-part reference builder.
     """
+    if cache is not None:
+        from repro.mesh import plan_cache as _plan_cache
+
+        return _plan_cache.cached_build_halo_plan(
+            cache, slot, part, nbr, coeff, hierarchy=hierarchy,
+            num_parts=num_parts, device_axis=device_axis, weights=weights,
+            with_metrics=with_metrics, topo_token=topo_token, profile=profile,
+        )
     t_build = time.perf_counter()
+    prof = _ProfTimer(profile)
     slot = np.asarray(slot, np.int64)
     part = np.asarray(part)
     n, K = nbr.shape
@@ -260,9 +305,20 @@ def build_halo_plan(
         raise ValueError(f"part ids must lie in [0, {S})")
 
     # slot-rank compression: ordering by slot == ordering by rank, and
-    # ranks stay < n so packed (part, rank) keys cannot overflow int64
-    srank = np.empty((n,), np.int64)
-    srank[np.argsort(slot, kind="stable")] = np.arange(n, dtype=np.int64)
+    # ranks stay < n so packed (part, rank) keys cannot overflow int64.
+    # All three arrays are pure functions of the topology (slot, nbr) —
+    # the cache hands them back via ``_topo`` on AMR-free events.
+    if _topo is not None:
+        srank, valid, nbc = _topo
+    else:
+        sorder = np.argsort(slot, kind="stable")
+        srank = np.empty((n,), np.int64)
+        srank[sorder] = np.arange(n, dtype=np.int64)
+        valid = nbr >= 0
+        nbc = np.where(valid, nbr, 0).astype(np.int64)
+        if _capture is not None:
+            _capture["sorder"] = sorder
+    prof.mark("slot_sort_s")
 
     # --- owned layout: one lexsort over (part, slot) -----------------------
     ocells = np.lexsort((slot, part64))            # cells by (part, slot)
@@ -272,14 +328,14 @@ def build_halo_plan(
     orank = np.arange(n, dtype=np.int64) - ostarts[oprow]
     local_pos = np.empty((n,), np.int64)
     local_pos[ocells] = orank
+    prof.mark("owned_lexsort_s")
 
     # one (n, K) gather of the neighbor's owner, shared by the ghost
     # pass and the stencil tables (the dominant cost at ~1M cells)
-    valid = nbr >= 0
-    nbc = np.where(valid, nbr, 0).astype(np.int64)
     pn = part64[nbc]                                # neighbor's owner
     same = valid & (pn == part64[:, None])
     other = valid & ~same                           # ghost-reading lanes
+    prof.mark("gather_s")
 
     # --- ghost sets: cross-part face pairs, deduped per (part, slot) ------
     grow, gcol = np.nonzero(other)
@@ -294,6 +350,7 @@ def build_halo_plan(
     gcounts = np.bincount(gp, minlength=S)
     gstarts = np.concatenate(([0], np.cumsum(gcounts)))
     grank = np.arange(gp.size, dtype=np.int64) - gstarts[gp]
+    prof.mark("ghost_dedup_s")
 
     cap = _roundup(int(ocounts.max()) if n else 0)
     gcap = _roundup(max(int(gcounts.max()) if gcounts.size else 0, 1))
@@ -344,6 +401,7 @@ def build_halo_plan(
     boundary_idx = np.full((S, bcap), -1, np.int32)
     interior_idx[pi, np.arange(pi.size) - istarts[pi]] = ri
     boundary_idx[pb, np.arange(pb.size) - bstarts[pb]] = rb
+    prof.mark("tables_s")
 
     # --- routing stages ----------------------------------------------------
     if N == 1:
@@ -354,6 +412,7 @@ def build_halo_plan(
         stages, ghost_fetch = _two_hop_stages_vec(
             axes, N, D, n, gp, gc, gr, grank, part64, local_pos, gcap
         )
+    prof.mark("stage_pack_s")
 
     mets = _halo_metrics_vec(
         part, nbr, ocounts, gcounts, gp, gc, D, stages, weights,
@@ -362,6 +421,15 @@ def build_halo_plan(
     mets["InteriorCells"] = int(pi.size)
     mets["BoundaryCells"] = int(pb.size)
     mets["PlanBuildSeconds"] = time.perf_counter() - t_build
+    prof.mark("metrics_s")
+    if _capture is not None:
+        _capture.update(
+            part64=part64, srank=srank, valid=valid, nbc=nbc,
+            ocells=ocells, okey=oprow * n + srank[ocells],
+            ocounts=ocounts, local_pos=local_pos, same=same, other=other,
+            gp=gp, gc=gc, gr=gr, gcounts=gcounts,
+            reads_ghost=reads_ghost, cap=cap, gcap=gcap,
+        )
     return HaloPlan(
         axes=axes,
         num_parts=S,
@@ -762,6 +830,7 @@ def build_move_plan(
     *,
     hierarchy=None,
     full: bool = False,
+    cache=None,
 ) -> MovePlan:
     """Compile the owned-state exchange from ``old``'s layout to
     ``new``'s (same cells, new part assignment).
@@ -777,25 +846,37 @@ def build_move_plan(
     one sort + ``searchsorted`` (no per-slot dicts), and the lane
     tables fill by sorted-run ranks — bit-identical to
     :func:`build_move_plan_legacy`.
+
+    ``cache`` (the same :class:`~repro.mesh.plan_cache.PlanCache` the
+    halo builds used) shares the per-event owner gather: when ``old``
+    and ``new`` are the cache's last two halo builds, the slot-sorted
+    (old owner, new owner, old row, slot) join is read from the cached
+    layout state instead of re-deriving it from ``owned_slot`` — one
+    gather per partition event, not two. The output is bit-identical
+    either way (the join is a pure function of the two layouts).
     """
     t_build = time.perf_counter()
     S = old.owned_idx.shape[0]
-    # old layout rows, joined to the new owner by slot sort (slots are
-    # unique, so ascending slot is the canonical merge order)
-    op_r, ot_r = np.nonzero(old.owned_slot >= 0)
-    oslot = old.owned_slot[op_r, ot_r]
-    oo = np.argsort(oslot, kind="stable")
-    op_r, ot_r, oslot = op_r[oo].astype(np.int64), ot_r[oo].astype(np.int64), oslot[oo]
-    np_r, nt_r = np.nonzero(new.owned_slot >= 0)
-    nslot = new.owned_slot[np_r, nt_r]
-    no = np.argsort(nslot, kind="stable")
-    np_r, nslot = np_r[no].astype(np.int64), nslot[no]
-    pos = np.searchsorted(nslot, oslot)
-    hit = (pos < nslot.size) & (nslot[np.minimum(pos, max(nslot.size - 1, 0))] == oslot)
-    if not hit.all():
-        raise KeyError(int(oslot[~hit][0]))
-    old_part = op_r
-    new_part = np_r[pos]
+    pro = cache.move_prologue(old, new) if cache is not None else None
+    if pro is not None:
+        old_part, new_part, ot_r, oslot = pro
+    else:
+        # old layout rows, joined to the new owner by slot sort (slots
+        # are unique, so ascending slot is the canonical merge order)
+        op_r, ot_r = np.nonzero(old.owned_slot >= 0)
+        oslot = old.owned_slot[op_r, ot_r]
+        oo = np.argsort(oslot, kind="stable")
+        op_r, ot_r, oslot = op_r[oo].astype(np.int64), ot_r[oo].astype(np.int64), oslot[oo]
+        np_r, nt_r = np.nonzero(new.owned_slot >= 0)
+        nslot = new.owned_slot[np_r, nt_r]
+        no = np.argsort(nslot, kind="stable")
+        np_r, nslot = np_r[no].astype(np.int64), nslot[no]
+        pos = np.searchsorted(nslot, oslot)
+        hit = (pos < nslot.size) & (nslot[np.minimum(pos, max(nslot.size - 1, 0))] == oslot)
+        if not hit.all():
+            raise KeyError(int(oslot[~hit][0]))
+        old_part = op_r
+        new_part = np_r[pos]
     mig = _migration.migration_plan(
         old_part, new_part, S,
         hierarchy=hierarchy if (hierarchy is not None and hierarchy.num_nodes > 1) else None,
@@ -808,11 +889,12 @@ def build_move_plan(
         keep[old_part[stay], ot_r[stay]] = True
         mm = ~stay
     msrc, mdst, mt, mslot = old_part[mm], new_part[mm], ot_r[mm], oslot[mm]
+    mets_extra = {} if pro is None else {"PlanCacheHits": cache.stats.move_hits}
     if msrc.size == 0:
         return MovePlan(
             kind="none", axes=old.axes, cap_old=old.cap, cap_new=new.cap,
             keep=keep, stages=(), migration=mig,
-            metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
+            metrics={**mets_extra, "PlanBuildSeconds": time.perf_counter() - t_build},
         )
 
     if hierarchy is not None and hierarchy.num_nodes > 1:
@@ -863,7 +945,7 @@ def build_move_plan(
     return MovePlan(
         kind=kind, axes=old.axes, cap_old=old.cap, cap_new=new.cap,
         keep=keep, stages=stages, migration=mig,
-        metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
+        metrics={**mets_extra, "PlanBuildSeconds": time.perf_counter() - t_build},
     )
 
 
@@ -977,3 +1059,8 @@ def build_move_plan_legacy(
         keep=keep, stages=stages, migration=mig,
         metrics={"PlanBuildSeconds": time.perf_counter() - t_build},
     )
+
+
+# re-export: the cross-event cache lives in its own module but is part
+# of this layer's public surface (`build_halo_plan(..., cache=...)`)
+from repro.mesh.plan_cache import PlanCache, PlanCacheStats  # noqa: E402,F401

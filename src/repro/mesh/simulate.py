@@ -132,6 +132,12 @@ class SimStats:
     # builders' own PlanBuildSeconds — the cost that bounds how often
     # repartitioning can pay off
     plan_build_s: float = 0.0
+    # cross-event plan-cache behavior (repro.mesh.plan_cache): builds
+    # served by delta patching / scratch fallbacks / owned rows the
+    # patches rewrote (vs n_cells * events a scratch build would touch)
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_patched_rows: int = 0
     # per-phase attribution of the sweep, measured once per compiled
     # plan by the single-phase probes (reporting only: the hot loop runs
     # the one fused overlapped program, where interior compute hides
@@ -186,6 +192,10 @@ def run_distributed(
         max_depth=cfg.engine_max_depth,
     )
     slots = np.arange(ev0.mesh.n, dtype=np.int64)  # from_points fills 0..n-1
+    # one plan cache per run: reslice events delta-patch the previous
+    # event's construction state instead of rebuilding from scratch;
+    # the engine's topology_version keys the AMR-sensitive tier
+    plan_cache = _halo.PlanCache()
 
     st = SimStats()
     u_host = np.asarray(u0, np.float32)
@@ -253,6 +263,7 @@ def run_distributed(
             plan = _halo.build_halo_plan(
                 slots, part_cells, ev.nbr, ev.coeff,
                 hierarchy=hplan, weights=ev.weights, with_metrics=False,
+                cache=plan_cache, topo_token=rp.topology_version,
             )
             st.plan_build_s += plan.metrics["PlanBuildSeconds"]
             quality_args = (part_cells, ev.nbr, ev.weights)
@@ -264,7 +275,8 @@ def run_distributed(
         else:
             if changed or driver == "rebuild":
                 mv = _halo.build_move_plan(
-                    prev_plan, plan, hierarchy=hplan, full=driver == "rebuild"
+                    prev_plan, plan, hierarchy=hplan, full=driver == "rebuild",
+                    cache=plan_cache,
                 )
                 st.plan_build_s += mv.metrics["PlanBuildSeconds"]
                 t0 = time.perf_counter()
@@ -300,6 +312,9 @@ def run_distributed(
     st.intra_reslices = rp.stats.intra_reslices
     st.inter_reslices = rp.stats.inter_reslices
     st.rebuilds = rp.stats.rebuilds
+    st.plan_cache_hits = plan_cache.stats.halo_hits + plan_cache.stats.move_hits
+    st.plan_cache_misses = plan_cache.stats.halo_misses + plan_cache.stats.move_misses
+    st.plan_patched_rows = plan_cache.stats.patched_rows
     st.cells_final = prev_n
     st.halo_metrics = dict(prev_plan.metrics)
     if quality_args is not None:

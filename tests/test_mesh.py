@@ -361,6 +361,10 @@ def test_distributed_stencil_bit_equal_and_loop_closes():
             assert np.array_equal(uref, u), (driver, np.abs(uref - u).max())
             assert st.events == 8 and st.amr_events == 2
             assert st.repartition_events >= 1
+            # the plan cache sees every event; the t=0 build is a miss
+            # and cache-path plans stayed bit-equal (or u would differ)
+            assert st.plan_cache_misses >= 1
+            assert st.plan_cache_hits + st.plan_cache_misses >= st.repartition_events
         print("OK", st.repartition_events)
     """)
     assert "OK" in out

@@ -59,6 +59,24 @@ def test_insert_only_keygens_the_delta(rng):
     assert rp.num_active() == 1024 + 64
 
 
+def test_topology_version_tracks_point_population_only(rng):
+    """`topology_version` is the plan caches' invalidation key: it must
+    bump on insert/delete (the tracked population changed) and stay put
+    across re-slices and rebuilds (same cells, new owners)."""
+    _, _, rp = _mk(rng)
+    assert rp.topology_version == 0
+    rp.update_weights(jnp.asarray(1.0 + rng.random(1024), jnp.float32))
+    rp.rebalance()
+    assert rp.topology_version == 0          # re-slice: same population
+    rp.rebuild()
+    assert rp.topology_version == 0          # rebuild: same population
+    slots = rp.insert(jnp.asarray(rng.random((16, 3)), jnp.float32),
+                      jnp.ones(16, jnp.float32))
+    assert rp.topology_version == 1
+    rp.delete(slots[:4])
+    assert rp.topology_version == 2
+
+
 # --- amortized controller (Alg. 3) -------------------------------------------
 
 def test_controller_triggers_rebuild_exactly_on_credit_exhaustion(rng):
