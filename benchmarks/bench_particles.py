@@ -1,0 +1,251 @@
+"""Particle workload: distributed N-body correctness + incremental
+re-slice economics, plus the coupled particle-mesh loop, on the shared
+partition core.
+
+The claims under test (paper §V-C applications):
+
+* **correctness** — the distributed leapfrog (cutoff interaction plans
+  compiled per partition event, ghost-position exchange overlapped with
+  the interior pair kernel, state migrated between partitions on
+  device) is BIT-EQUAL to the single-device reference after the full
+  simulation, across every repartition, registration and migration
+  event. Equality is exact (``np.array_equal`` on position AND
+  velocity), not a tolerance. The coupled particle-mesh run holds the
+  same gate on the mesh field as well — ONE partition, ONE interaction
+  plan and ONE migration carrying both entity kinds.
+* **economics** — answering load drift (per-particle interaction degree
+  as the cost model) with the hierarchical engine's incremental
+  re-slice plus moved-rows-only migration must beat a full rebuild plus
+  full redistribute on measured walltime, on the same trajectory, same
+  devices, warm executors.
+
+``--smoke`` (nightly CI) runs at 8 fake host devices arranged 2 nodes x
+4 devices, gates both claims plus a >= 10 combined repartition-event
+floor, writes ``BENCH_particles.json`` and prints the summary as the
+final stdout line. Runs each driver twice and times the second pass so
+jit compiles (shared through the lru-cached executors) don't pollute
+the comparison.
+
+    PYTHONPATH=src python benchmarks/bench_particles.py [events] [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+SMOKE = "--smoke" in sys.argv
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # fake devices must be requested before jax initializes; under
+    # run.py the flag must NOT leak into single-device suites, so rows
+    # report SKIPPED there unless devices already exist
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:  # run as a script: the benchmarks dir itself is on sys.path
+    from _artifact import write_artifact
+
+_argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+EVENTS = int(_argv[0]) if _argv else 12
+NODES, DEV = 2, 4
+
+
+def _configs():
+    from repro.particles import pic, simulate
+
+    nbody = simulate.ParticleSimConfig(n=512, events=EVENTS, substeps=4)
+    coupled = pic.PICSimConfig(n=256, events=max(EVENTS * 2 // 3, 4),
+                               substeps=2, mesh_level=3)
+    return nbody, coupled
+
+
+def _run(events_cfg=None):
+    import jax
+
+    from repro.core import partitioner as pt
+    from repro.distributed import sharding as shd
+    from repro.particles import pic, simulate
+
+    nshards = NODES * DEV
+    if len(jax.devices()) < nshards:
+        return [(f"particles/SKIPPED(<{nshards} devices)", 0.0, "")], None
+
+    cfg, ccfg = events_cfg or _configs()
+    t0 = time.perf_counter()
+    ref = simulate.run_reference(cfg)
+    ref_s = time.perf_counter() - t0
+
+    hplan = pt.HierarchyPlan(num_nodes=NODES, devices_per_node=DEV)
+    mesh = shd.make_node_device_mesh(NODES, DEV)
+
+    results = {}
+    for driver in ("incremental", "rebuild"):
+        # two passes: executors are lru-cached, the second is warm
+        for _ in range(2):
+            out, st = simulate.run_distributed(cfg, mesh, hplan, driver=driver)
+        results[driver] = (out, st)
+
+    # coupled particle-mesh: one partition carries cells + particles
+    u_ref, ps_ref = pic.run_reference_coupled(ccfg)
+    u, ps, cst = pic.run_distributed_coupled(
+        ccfg, mesh, hplan, driver="incremental"
+    )
+    bit_pic = bool(
+        np.array_equal(u_ref, u)
+        and np.array_equal(ps_ref.pos, ps.pos)
+        and np.array_equal(ps_ref.vel, ps.vel)
+    )
+
+    inc, reb = results["incremental"][1], results["rebuild"][1]
+    bit_inc = bool(
+        np.array_equal(ref.pos, results["incremental"][0].pos)
+        and np.array_equal(ref.vel, results["incremental"][0].vel)
+    )
+    bit_reb = bool(
+        np.array_equal(ref.pos, results["rebuild"][0].pos)
+        and np.array_equal(ref.vel, results["rebuild"][0].vel)
+    )
+    t_inc = inc.engine_s + inc.move_s
+    t_reb = reb.engine_s + reb.move_s
+    repart_events = inc.repartition_events + cst.repartition_events
+
+    rows = [
+        (
+            f"particles/reference/n={cfg.n}", ref_s * 1e6,
+            f"events={cfg.events};substeps={cfg.substeps};k_max={inc.k_max}",
+        ),
+        (
+            "particles/incremental_reslice+migrate", t_inc * 1e6,
+            f"bit_equal={bit_inc};repart_events={inc.repartition_events};"
+            f"registrations={inc.registration_events};"
+            f"crossers={inc.crossers_total};"
+            f"node_local_moves={inc.node_local_moves}",
+        ),
+        (
+            "particles/rebuild+redistribute", t_reb * 1e6,
+            f"bit_equal={bit_reb};rebuilds={reb.rebuilds};"
+            f"speedup={t_reb / max(t_inc, 1e-9):.1f}x",
+        ),
+        (
+            "particles/coupled_pic",
+            (cst.engine_s + cst.move_s + cst.force_s) * 1e6,
+            f"bit_equal={bit_pic};cells={cst.n_cells};n={ccfg.n};"
+            f"repart_events={cst.repartition_events};"
+            f"registrations={cst.registration_events}",
+        ),
+    ]
+    hm = inc.halo_metrics
+    stats = {
+        "n": cfg.n,
+        "events": cfg.events,
+        "substeps": cfg.substeps,
+        "radius": cfg.radius,
+        "nodes": NODES,
+        "devices_per_node": DEV,
+        "bit_equal_incremental": bit_inc,
+        "bit_equal_rebuild": bit_reb,
+        "bit_equal_coupled": bit_pic,
+        "repartition_events": inc.repartition_events,
+        "coupled_repartition_events": cst.repartition_events,
+        "repartition_events_total": repart_events,
+        "registration_events": inc.registration_events,
+        "crossers_total": inc.crossers_total,
+        "intra_reslices": inc.intra_reslices,
+        "inter_reslices": inc.inter_reslices,
+        "incremental_rebuilds": inc.rebuilds,
+        "node_local_moves": inc.node_local_moves,
+        "moved_total_incremental": inc.moved_total,
+        "moved_inter_node_incremental": inc.moved_inter_node,
+        "moved_total_rebuild": reb.moved_total,
+        "k_max": inc.k_max,
+        "incremental_engine_s": inc.engine_s,
+        "incremental_move_s": inc.move_s,
+        "incremental_force_s": inc.force_s,
+        "incremental_neighbor_s": inc.neighbor_s,
+        "incremental_plan_build_s": inc.plan_build_s,
+        "rebuild_plan_build_s": reb.plan_build_s,
+        "incremental_plan_cache_hits": inc.plan_cache_hits,
+        "incremental_plan_cache_misses": inc.plan_cache_misses,
+        "rebuild_engine_s": reb.engine_s,
+        "rebuild_move_s": reb.move_s,
+        "rebuild_force_s": reb.force_s,
+        "incremental_total_s": t_inc,
+        "rebuild_total_s": t_reb,
+        "speedup": t_reb / max(t_inc, 1e-9),
+        "reference_s": ref_s,
+        "coupled_n_cells": cst.n_cells,
+        "coupled_registration_events": cst.registration_events,
+        "coupled_crossers_total": cst.crossers_total,
+        "coupled_engine_s": cst.engine_s,
+        "coupled_move_s": cst.move_s,
+        "coupled_force_s": cst.force_s,
+        "max_surface_index": hm.get("MaxSurfaceIndex"),
+        "max_edge_cut": hm.get("MaxEdgeCut"),
+        "max_degree": hm.get("MaxDegree"),
+        "inter_node_ghosts": hm.get("InterNodeGhosts"),
+        "intra_node_ghosts": hm.get("IntraNodeGhosts"),
+        "interior_cells": hm.get("InteriorCells"),
+        "boundary_cells": hm.get("BoundaryCells"),
+    }
+    return rows, stats
+
+
+def bench_particles_rows() -> list[tuple]:
+    """CSV rows (name, us_per_call, derived); SKIPPED row on < 8 devices."""
+    rows, _ = _run()
+    return rows
+
+
+def smoke_main() -> int:
+    rows, stats = _run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if stats is None:
+        print("WARNING: particles gate skipped (< 8 devices)")
+        return 0
+    ok_bits = (
+        stats["bit_equal_incremental"]
+        and stats["bit_equal_rebuild"]
+        and stats["bit_equal_coupled"]
+    )
+    ok_events = stats["repartition_events_total"] >= 10
+    ok_speed = stats["speedup"] > 1.0
+    passed = ok_bits and ok_events and ok_speed
+    if not passed:
+        print(
+            f"FAIL: bit_equal={ok_bits} "
+            f"(inc={stats['bit_equal_incremental']}, "
+            f"reb={stats['bit_equal_rebuild']}, "
+            f"pic={stats['bit_equal_coupled']}), "
+            f"repartition_events_total={stats['repartition_events_total']} "
+            f"(need >=10), "
+            f"incremental {stats['incremental_total_s']*1e3:.1f} ms vs "
+            f"rebuild {stats['rebuild_total_s']*1e3:.1f} ms "
+            f"(speedup={stats['speedup']:.2f}x, need >1.0)"
+        )
+    else:
+        print(
+            f"PASS: distributed leapfrog bit-equal to reference across "
+            f"{stats['repartition_events_total']} repartition events "
+            f"({stats['coupled_repartition_events']} in the coupled "
+            f"particle-mesh run, {stats['registration_events']} "
+            f"registration events, {stats['crossers_total']} crossers); "
+            f"incremental re-slice + migration {stats['speedup']:.1f}x "
+            f"faster than rebuild+redistribute "
+            f"({stats['incremental_total_s']*1e3:.1f} ms vs "
+            f"{stats['rebuild_total_s']*1e3:.1f} ms)"
+        )
+    write_artifact("particles", stats, passed=passed, echo=True)
+    return 0 if passed else 1
+
+
+if __name__ == "__main__":
+    if SMOKE:
+        sys.exit(smoke_main())
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_particles_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -87,6 +87,7 @@ def main() -> None:
         bench_hierarchy,
         bench_mesh,
         bench_moe,
+        bench_particles,
         bench_partitioner,
         bench_plans,
         bench_spmv,
@@ -102,6 +103,7 @@ def main() -> None:
         ("incremental LB (SIV)", bench_partitioner.bench_migration),
         ("hierarchical reslice (nodes x devices)", bench_hierarchy.bench_hierarchy_rows),
         ("AMR mesh stencil loop (SI, SIV)", bench_mesh.bench_mesh_rows),
+        ("particle N-body + coupled PIC (SV-C)", bench_particles.bench_particles_rows),
         ("plan construction (vectorized vs legacy)", bench_plans.bench_plans_rows),
         ("spmv tables (Tables II-VII)", bench_spmv.bench_spmv_tables),
         ("spmv execution", bench_spmv.bench_spmv_execution),

@@ -17,6 +17,7 @@ from repro.kernels import bucket_search as _bs
 from repro.kernels import hilbert as _hil
 from repro.kernels import knapsack_scan as _ks
 from repro.kernels import morton as _mor
+from repro.kernels import pair_force as _pf
 from repro.kernels import stencil_update as _su
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -174,3 +175,30 @@ def stencil_update(
             vals_all, u_rows, nbr, valid, coeff, interpret=INTERPRET
         )
     return _su.stencil_update_ref(vals_all, u_rows, nbr, valid, coeff)
+
+
+def pair_accel(
+    pos_all: jax.Array,
+    mass_all: jax.Array,
+    x_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    rc2,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Fused pairwise short-range acceleration (gather + cutoff weight +
+    K-reduce) — the particle executors' inner loop. ``use_pallas``
+    dispatches the Pallas kernel (REPRO_PALLAS_COMPILE-respecting via
+    ``INTERPRET``); the default jnp fallback is bit-equal by
+    construction — both evaluate `kernels.pair_force.pair_accel_ref`'s
+    expression.
+    """
+    if use_pallas:
+        return _pf.fused_pair_accel(
+            pos_all, mass_all, x_rows, nbr, valid,
+            jnp.asarray(rc2, jnp.float32), interpret=INTERPRET,
+        )
+    return _pf.pair_accel_ref(
+        pos_all, mass_all, x_rows, nbr, valid, jnp.asarray(rc2, jnp.float32)
+    )

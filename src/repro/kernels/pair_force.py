@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused pairwise short-range acceleration (paper
+§V-C particle hot loop).
+
+One pass over (rows, K) interaction tiles fuses the neighbor
+position/mass gather, the cutoff weight ``max(rc2 - |r|^2, 0) * m_j``
+and the K-reduction into per-row accelerations — the unfused jnp path
+materializes the (n, K, d) displacement and contribution intermediates
+in HBM between separate ops; here each grid block stages the FULL
+owned+ghost position matrix and mass vector into VMEM once ((V, d) +
+(V,) float32 — the same in-VMEM-directory regime as `stencil_update`)
+and streams the (BLOCK_R, K) index/mask tiles past it.
+
+The force law is the bounded short-range attraction
+
+    a_i = sum_j m_j * max(rc2 - |x_j - x_i|^2, 0) * (x_j - x_i)
+
+smooth and exactly zero at the cutoff boundary, so an interaction table
+may safely include candidates at or beyond the cutoff — their weight is
+exactly ``0.0`` and a padded lane contributes a signed zero, identical
+on every execution path that consumes the SAME (n, K) table.
+
+Bit-equality contract: :func:`pair_accel_ref` is THE definition — both
+the per-lane squared distance (dimension sum) and the K-reduction are
+*explicit unrolled chains* of elementwise adds in ascending order, the
+same discipline `kernels.stencil_update` established: a ``jnp.sum``
+lowers to an XLA Reduce whose accumulation order is chosen per fusion
+context, while a fixed add chain is ordinary float arithmetic XLA must
+not reassociate. Every caller — single-device reference integrator,
+interior/boundary distributed executor, Pallas kernel — produces
+identical bits by construction, which is what the particle drivers gate
+on (``np.array_equal`` across repartition events).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 1024
+VALS_MAX = 1 << 20  # owned+ghost rows whose (V, d) positions fit VMEM
+
+
+def pair_accel_ref(
+    pos_all: jax.Array,
+    mass_all: jax.Array,
+    x_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    rc2: jax.Array,
+) -> jax.Array:
+    """The one definition of the fused pair acceleration (jnp fallback).
+
+    ``pos_all`` (V, d) owned+ghost positions, ``mass_all`` (V,) their
+    masses, ``x_rows`` (R, d) the positions of the rows being updated,
+    ``nbr``/``valid`` (R, K) the row-local interaction table, ``rc2``
+    the squared cutoff radius. Returns the (R, d) accelerations.
+    """
+    pj = pos_all[nbr]                       # (R, K, d)
+    mj = mass_all[nbr]                      # (R, K)
+    diff = pj - x_rows[:, None, :]
+    # fixed-order dimension accumulation (see module docstring)
+    d2 = diff[..., 0] * diff[..., 0]
+    for a in range(1, diff.shape[-1]):
+        d2 = d2 + diff[..., a] * diff[..., a]
+    w = jnp.where(valid, jnp.maximum(rc2 - d2, jnp.float32(0.0)) * mj,
+                  jnp.float32(0.0))
+    contrib = w[..., None] * diff           # (R, K, d)
+    # fixed-order K accumulation (NOT jnp.sum)
+    acc = contrib[:, 0, :]
+    for k in range(1, contrib.shape[1]):
+        acc = acc + contrib[:, k, :]
+    return acc
+
+
+def _accel_kernel(rc2_ref, pos_ref, mass_ref, x_ref, nbr_ref, valid_ref, out_ref):
+    # same jnp expression as pair_accel_ref, on one (BLOCK_R, K) tile
+    pos_all = pos_ref[...]
+    mass_all = mass_ref[...]
+    x = x_ref[...]
+    rc2 = rc2_ref[0]
+    pj = pos_all[nbr_ref[...]]
+    mj = mass_all[nbr_ref[...]]
+    diff = pj - x[:, None, :]
+    d2 = diff[..., 0] * diff[..., 0]
+    for a in range(1, diff.shape[-1]):
+        d2 = d2 + diff[..., a] * diff[..., a]
+    w = jnp.where(valid_ref[...], jnp.maximum(rc2 - d2, jnp.float32(0.0)) * mj,
+                  jnp.float32(0.0))
+    contrib = w[..., None] * diff
+    acc = contrib[:, 0, :]
+    for k in range(1, contrib.shape[1]):
+        acc = acc + contrib[:, k, :]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_pair_accel(
+    pos_all: jax.Array,
+    mass_all: jax.Array,
+    x_rows: jax.Array,
+    nbr: jax.Array,
+    valid: jax.Array,
+    rc2: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused gather + cutoff weight + contribution + K-reduce, one kernel
+    dispatch. Pad rows (``valid`` all False) come out exactly zero —
+    exactly what the unfused path computes for them."""
+    R, K = nbr.shape
+    V, d = pos_all.shape
+    assert V <= VALS_MAX, "owned+ghost positions must fit VMEM (tile beyond)"
+    r_pad = pl.cdiv(R, BLOCK_R) * BLOCK_R
+
+    def pad(a, fill):
+        return jnp.full((r_pad,) + a.shape[1:], fill, a.dtype).at[:R].set(a)
+
+    out = pl.pallas_call(
+        _accel_kernel,
+        grid=(r_pad // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((V, d), lambda i: (0, 0)),
+            pl.BlockSpec((V,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_R, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, K), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, d), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(rc2, jnp.float32).reshape(1),
+        pos_all,
+        mass_all,
+        pad(x_rows, 0.0),
+        pad(nbr, 0),
+        pad(valid, False),
+    )
+    return out[:R]

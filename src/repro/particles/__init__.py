@@ -1,0 +1,12 @@
+"""Particle application (paper §V-C): N-body short-range forces and
+coupled particle-mesh (PIC) on the shared partition core.
+
+`interact` generalizes the mesh halo machinery to cutoff-radius
+interaction plans; `state` keys moving particles through the
+repartitioning engines with per-event re-registration as they cross
+partition boundaries; `pic` couples particles and a `repro.mesh.amr`
+mesh under ONE partition with deposit/interpolate transfers and a
+single migration carrying both payloads; `simulate` closes the loop
+like `repro.mesh.simulate`, gated bit-equal against a single-device
+reference.
+"""

@@ -1,0 +1,140 @@
+"""Slot-tracked particle state keyed through the repartitioning engines.
+
+Particles are host-global arrays (position/velocity/mass in stable row
+order — the order both backends integrate, so rows never renumber) plus
+a per-row storage slot inside a `HierarchicalRepartitioner`. The engine
+partitions its *registered* positions; as particles move, a row's
+current position can drift into a region owned by another part. The
+:meth:`ParticleEngine.reregister` pass detects those crossers through
+the engine's own CurveIndex directory (`halo.owners_from_index` — the
+O(B) routing view, never an O(n) scan) and re-registers them with a
+``delete`` + ``insert`` round trip, which is the engine's native
+per-step insert/delete path: freed slots are reused, summaries update
+by delta scatters, and ``topology_version`` bumps so plan caches
+observe the population change.
+
+The coupled (PIC) run registers the mesh cells as a static *anchor
+prefix* ahead of the particles: anchor rows are inserted first (slots
+``0..n_anchor-1``), never re-registered, and never deleted — so freed
+slots always belong to particles and the slot space stays cleanly
+split, which is what lets one partition, one interaction plan and one
+migration carry both entity kinds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partitioner as _pt
+from repro.core.repartition import HierarchicalRepartitioner
+from repro.mesh import halo as _halo
+
+
+@dataclass
+class ParticleSet:
+    """Host-global particle state (stable row order, float32)."""
+
+    pos: np.ndarray    # (n, d)
+    vel: np.ndarray    # (n, d)
+    mass: np.ndarray   # (n,)
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+
+def random_particles(
+    n: int, d: int, *, seed: int = 0, v0: float = 0.8, margin: float = 0.1
+) -> ParticleSet:
+    """Deterministic initial condition: positions away from the walls,
+    centered velocities, masses in [0.5, 1.5)."""
+    rng = np.random.default_rng(seed)
+    pos = (margin + (1.0 - 2.0 * margin) * rng.random((n, d))).astype(np.float32)
+    vel = (v0 * (rng.random((n, d)) - 0.5)).astype(np.float32)
+    mass = (0.5 + rng.random((n,))).astype(np.float32)
+    return ParticleSet(pos=pos, vel=vel, mass=mass)
+
+
+class ParticleEngine:
+    """A particle population (plus optional anchor prefix) registered in
+    a hierarchical repartitioning engine, tracked by storage slot."""
+
+    def __init__(
+        self,
+        points: np.ndarray,
+        weights: np.ndarray,
+        *,
+        plan,
+        n_anchor: int = 0,
+        cfg: "_pt.PartitionerConfig | None" = None,
+        node_threshold: float = 1.20,
+        capacity: int | None = None,
+        bucket_size: int = 8,
+        max_depth: int = 10,
+    ):
+        n = points.shape[0]
+        self.n_anchor = int(n_anchor)
+        self.bucket_size = int(bucket_size)
+        self.rp = HierarchicalRepartitioner(
+            jnp.asarray(points, jnp.float32),
+            jnp.asarray(weights, jnp.float32),
+            plan=plan,
+            cfg=cfg or _pt.PartitionerConfig(use_tree=True, curve="hilbert"),
+            node_threshold=node_threshold,
+            capacity=capacity or 2 * n,
+            bucket_size=bucket_size,
+            max_depth=max_depth,
+        )
+        # from_points fills slots 0..n-1 in row order: anchors first
+        self.slots = np.arange(n, dtype=np.int64)
+        self.registrations = 0      # events where >= 1 particle crossed
+        self.crossers_total = 0
+
+    @property
+    def particle_slots(self) -> np.ndarray:
+        return self.slots[self.n_anchor:]
+
+    def reregister(self, pos: np.ndarray, weights: np.ndarray) -> int:
+        """Re-register the particles whose CURRENT position is owned by a
+        different part than their registered slot. ``pos``/``weights``
+        are per-particle (anchor rows excluded), in particle row order.
+        Returns the crosser count; their slot ids change in-place."""
+        pslots = self.particle_slots
+        index = self.rp.curve_index(self.bucket_size)
+        owner = _halo.owners_from_index(
+            index, np.asarray(self.rp.part), np.asarray(pos, np.float32)
+        )
+        assigned = self.rp.partition_of(pslots)
+        cross = np.nonzero(owner != assigned)[0]
+        if cross.size:
+            self.rp.delete(jnp.asarray(pslots[cross]))
+            got = self.rp.insert(
+                jnp.asarray(pos[cross], jnp.float32),
+                jnp.asarray(weights[cross], jnp.float32),
+            )
+            self.slots[self.n_anchor + cross] = np.asarray(got)
+            assert self.slots[self.n_anchor:].min() >= self.n_anchor, (
+                "anchor slots must never be recycled into particles"
+            )
+            self.registrations += 1
+            self.crossers_total += int(cross.size)
+        return int(cross.size)
+
+    def update_weights(self, weights: np.ndarray) -> None:
+        """Drift the per-row load (all rows, anchor included)."""
+        self.rp.update_weights(
+            jnp.asarray(weights, jnp.float32), slot_ids=jnp.asarray(self.slots)
+        )
+
+    def step(self):
+        """One Alg. 3 engine step (incremental re-slice or rebuild)."""
+        return self.rp.step()
+
+    def rebuild(self):
+        return self.rp.rebuild()
+
+    def partition(self) -> np.ndarray:
+        """(n,) current part id per row (anchor + particles)."""
+        return self.rp.partition_of(self.slots)

@@ -302,6 +302,14 @@ class DistributedQueryEngine:
         self._keys_s = jax.device_put(jnp.asarray(pl_keys), sh)
         self._firsts_h = firsts
         self._chunk_bounds = bounds
+        # per-lane traffic counters restart with the layout: lane ids are
+        # positions in THIS placement's chunk order
+        self._lane_hits = np.zeros(nsh, np.float64)
+        # a lane-subset annex is addressed by placement lane id — stale
+        # against the new layout (an engine-wide annex is not: its rows
+        # are index rows, untouched by placement)
+        if self._hot is not None and self._hot.get("lanes") is not None:
+            self._hot = None
 
     def maybe_refresh(self, owner, bucket_size: int | None = None) -> bool:
         """Swap in the owner's current index iff ours is stale, keeping
@@ -326,20 +334,62 @@ class DistributedQueryEngine:
         real query rows — padding and fillers are keyed after this)."""
         return self._hits.copy()
 
+    @property
+    def lane_hits(self) -> np.ndarray:
+        """Decayed per-lane (owner-shard) hit counts for the current
+        placement (a copy) — the traffic view ``replicate_hot``'s
+        ``shards=k`` uses to pick which lanes deserve an annex copy."""
+        return self._lane_hits.copy()
+
     def _note_hits(self, qk: np.ndarray) -> None:
         b = np.searchsorted(self._bucket_keys_h, qk, side="right").astype(np.int64) - 1
         np.clip(b, 0, self._hits.shape[0] - 1, out=b)
         if self.hit_decay < 1.0:
             self._hits *= self.hit_decay
         self._hits += np.bincount(b, minlength=self._hits.shape[0])
+        nsh = self._num_shards()
+        lane = np.searchsorted(self._firsts_h, qk, side="right").astype(np.int64) - 1
+        np.clip(lane, 0, nsh - 1, out=lane)
+        if self.hit_decay < 1.0:
+            self._lane_hits *= self.hit_decay
+        self._lane_hits += np.bincount(lane, minlength=nsh)
 
-    def replicate_hot(self, top_k: int = 8, *, min_hits: float = 1.0) -> list[int]:
+    def _lane_devices(self) -> list:
+        """The representative device of each serving lane: transpose the
+        mesh so the serving axes lead, then the first device along every
+        remaining axis — where a lane-targeted annex copy lives."""
+        axes = self.axis if isinstance(self.axis, tuple) else (self.axis,)
+        names = list(self.mesh.axis_names)
+        order = [names.index(a) for a in axes] + [
+            i for i, nm in enumerate(names) if nm not in axes
+        ]
+        dv = np.transpose(np.asarray(self.mesh.devices), order)
+        return dv.reshape(self._num_shards(), -1)[:, 0].tolist()
+
+    def replicate_hot(
+        self,
+        top_k: int = 8,
+        *,
+        min_hits: float = 1.0,
+        shards=None,
+    ) -> list[int]:
         """Install the hottest eligible buckets as a replicated annex —
         the paper's "exceptions to the partition". Point-location queries
         whose key lands in an annexed bucket are answered from the annex
         (bit-equal to routing, see `curve_index.replicable_buckets`)
         before any collective runs, so hot-key traffic stops consuming
         the owner shard's lanes. Returns the replicated bucket ids.
+
+        ``shards`` bounds the replication footprint: ``None`` (default)
+        keeps one engine-wide annex serving every query; an int ``k``
+        places an annex copy on only the ``k`` hottest serving lanes (by
+        the decayed ``lane_hits`` traffic counters); a sequence names
+        explicit lane ids. With a lane subset, only queries OWNED by a
+        selected lane are annex-served — exactly the traffic that was
+        saturating those lanes — and everything else routes as before,
+        so answers are bit-equal to both routing and the full annex
+        while the annex memory scales with the observed skew instead of
+        the shard count.
 
         kNN is never annex-served: its candidate window spans
         neighboring buckets, which the annex does not hold."""
@@ -364,15 +414,86 @@ class DistributedQueryEngine:
         )
         mask = np.zeros(self._hits.shape[0], bool)
         mask[hot] = True
-        self._hot = {
-            "pts": jnp.asarray(np.asarray(self.index.points)[rows]),
-            "ids": jnp.asarray(np.asarray(self.index.ids)[rows].astype(np.int32)),
-            "keys": jnp.asarray(np.asarray(self.index.keys)[rows]),
-            "bkeys": jnp.asarray(self._bucket_keys_h),
-            "mask": jnp.asarray(mask),
-        }
+        annex = (
+            np.asarray(self.index.points)[rows],
+            np.asarray(self.index.ids)[rows].astype(np.int32),
+            np.asarray(self.index.keys)[rows],
+            self._bucket_keys_h,
+            mask,
+        )
+        if shards is None:
+            lanes = None
+            copies = None
+            a = tuple(jnp.asarray(x) for x in annex)
+        else:
+            nsh = self._num_shards()
+            if isinstance(shards, (int, np.integer)):
+                if int(shards) < 0:
+                    raise ValueError(f"shards must be >= 0, got {shards}")
+                order = np.argsort(self._lane_hits, kind="stable")[::-1]
+                lanes = np.sort(order[: min(int(shards), nsh)])
+            else:
+                lanes = np.unique(np.asarray(list(shards), np.int64))
+                if lanes.size and (lanes[0] < 0 or lanes[-1] >= nsh):
+                    raise ValueError(
+                        f"lane ids must be in [0, {nsh}), got {lanes.tolist()}"
+                    )
+            if lanes.size == 0:
+                self._hot = None
+                return []
+            devs = self._lane_devices()
+            copies = {
+                int(l): tuple(
+                    jax.device_put(jnp.asarray(x), devs[int(l)]) for x in annex
+                )
+                for l in lanes
+            }
+            lanes = tuple(int(l) for l in lanes)
+            a = None
+        self._hot = {"annex": a, "lanes": lanes, "copies": copies}
         self.stats.replications += 1
         return hot.tolist()
+
+    def _serve_annex(self, queries, qk_np, found, ids, okv) -> np.ndarray:
+        """Answer hot-bucket point-location queries from the replicated
+        annex: fills the output arrays in place and returns the served
+        mask. With a lane-subset annex (``replicate_hot(shards=...)``)
+        only queries OWNED by a selected lane consult that lane's copy —
+        the same `_annex_pl` program over the same annex rows, so the
+        answers are bit-identical to the engine-wide annex and to
+        routing."""
+        h = self._hot
+        m = int(queries.shape[0])
+        served = np.zeros(m, bool)
+
+        def one(annex, rows):
+            pts, aids, keys, bkeys, mask = annex
+            hot, f_a, g_a, ok_a = _annex_pl(
+                pts, aids, keys, bkeys, mask,
+                queries[jnp.asarray(rows)], jnp.asarray(qk_np[rows]),
+                bucket_cap=self._scan_cap,
+            )
+            hot = np.asarray(hot)
+            if hot.any():
+                sel = rows[hot]
+                found[sel] = np.asarray(f_a)[hot]
+                ids[sel] = np.asarray(g_a)[hot]
+                okv[sel] = np.asarray(ok_a)[hot]
+                served[sel] = True
+
+        if h["lanes"] is None:
+            one(h["annex"], np.arange(m))
+        else:
+            nsh = self._num_shards()
+            lane = np.clip(
+                np.searchsorted(self._firsts_h, qk_np, side="right") - 1,
+                0, nsh - 1,
+            )
+            for lid in h["lanes"]:
+                rows = np.flatnonzero(lane == lid)
+                if rows.size:
+                    one(h["copies"][lid], rows)
+        return served
 
     # -- one-shot serving ----------------------------------------------------
 
@@ -391,18 +512,10 @@ class DistributedQueryEngine:
         okv = np.zeros(m, bool)
         pend = np.arange(m)
         if self._hot is not None and m:
-            h = self._hot
-            hot, f_a, g_a, ok_a = _annex_pl(
-                h["pts"], h["ids"], h["keys"], h["bkeys"], h["mask"],
-                queries, jnp.asarray(qk_np), bucket_cap=self._scan_cap,
-            )
-            hot = np.asarray(hot)
-            if hot.any():
-                found[hot] = np.asarray(f_a)[hot]
-                ids[hot] = np.asarray(g_a)[hot]
-                okv[hot] = np.asarray(ok_a)[hot]
-                self.stats.annex_served += int(hot.sum())
-                pend = pend[~hot]
+            served = self._serve_annex(queries, qk_np, found, ids, okv)
+            if served.any():
+                self.stats.annex_served += int(served.sum())
+                pend = pend[~served]
         if pend.size:
             self._route_pl(q_np, qk_np, pend, found, ids, okv)
         self.stats.queries_served += m

@@ -297,3 +297,110 @@ def test_tree_backed_and_skew_replication_subprocess():
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     assert "OK tree-backed" in out.stdout and "OK skew" in out.stdout
+
+
+def test_lane_subset_replication_subprocess():
+    """``replicate_hot(shards=...)`` on 8 fake devices: lane-hit
+    counters see the skewed traffic, a top-k lane subset annex serves
+    only those lanes' queries bit-equal to the reference, to the
+    engine-wide annex, and to plain routing; explicit lane ids work;
+    and a reshard drops the placement-addressed subset annex."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8"
+        " --xla_backend_optimization_level=0"
+    )
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import queries
+        from repro.core.partitioner import PartitionerConfig
+        from repro.core.repartition import Repartitioner
+        from repro.launch.mesh import make_mesh
+        from repro.serve.query_engine import DistributedQueryEngine
+
+        mesh = make_mesh((8,), ('data',))
+        rng = np.random.default_rng(11)
+        n = 4096
+        pts_h = rng.random((n, 2)).astype(np.float32)
+        pts = jnp.asarray(pts_h)
+        rp = Repartitioner(pts, None, num_parts=8, capacity=n,
+                           cfg=PartitionerConfig(curve='hilbert', use_tree=True))
+        idx = rp.curve_index(32)
+
+        def fresh():
+            return DistributedQueryEngine(idx, mesh, 'data', bucket_cap=32,
+                                          lane_rows=16, hit_decay=1.0)
+
+        # Zipf-hot traffic concentrated on a few buckets -> a few lanes
+        B = idx.num_buckets
+        zipf = 1.0 / np.arange(1, B + 1) ** 1.5
+        hot_bucket = rng.permutation(B)
+        bw = np.zeros(B); bw[hot_bucket] = zipf / zipf.sum()
+        starts = np.asarray(idx.bucket_starts)
+        rows = []
+        for b in rng.choice(B, 1024, p=bw):
+            lo, hi = int(starts[b]), int(starts[b + 1])
+            if hi > lo:
+                rows.append(int(rng.integers(lo, hi)))
+        qz = jnp.asarray(np.asarray(idx.points)[rows], jnp.float32)
+        ref = queries.point_location(idx, qz, bucket_cap=fresh()._scan_cap)
+
+        def check(eng):
+            got = eng.point_location(qz)
+            for a, b in zip(got, ref):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            return got
+
+        # 1) warm the counters, then annex the 2 hottest lanes only
+        eng = fresh()
+        check(eng)
+        assert float(eng.lane_hits.sum()) == float(qz.shape[0])
+        hot_lanes = np.argsort(eng.lane_hits)[::-1][:2]
+        assert eng.replicate_hot(top_k=12, shards=2)
+        assert set(eng._hot['lanes']) == set(int(l) for l in hot_lanes)
+        served0 = eng.stats.annex_served
+        check(eng)
+        assert eng.stats.annex_served > served0
+        # only selected lanes' copies exist, on those lanes' devices
+        devs = eng._lane_devices()
+        for l, copy in eng._hot['copies'].items():
+            assert copy[0].devices() == {devs[l]}
+
+        # 2) subset answers == engine-wide annex answers (bit-equal)
+        eng_full = fresh()
+        check(eng_full)
+        eng_full.replicate_hot(top_k=12)
+        check(eng_full)
+        assert eng_full.stats.annex_served > 0
+        assert eng_full._hot['lanes'] is None
+
+        # 3) explicit lane ids; out-of-range rejected
+        eng2 = fresh()
+        check(eng2)
+        assert eng2.replicate_hot(top_k=12, shards=[int(hot_lanes[0])])
+        served0 = eng2.stats.annex_served
+        check(eng2)
+        assert eng2.stats.annex_served > served0
+        try:
+            eng2.replicate_hot(top_k=12, shards=[99])
+        except ValueError:
+            pass
+        else:
+            raise AssertionError('bad lane id accepted')
+
+        # 4) reshard drops the placement-addressed subset annex but
+        #    keeps serving correct; shards=0 selects no lanes
+        eng2.reshard(mesh, 'data')
+        assert eng2._hot is None
+        check(eng2)
+        assert eng2.replicate_hot(top_k=12, shards=0) == []
+        check(eng2)
+        print('OK lane subset', int(eng.stats.annex_served))
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "OK lane subset" in out.stdout
